@@ -1,0 +1,47 @@
+"""Ablation of the beyond-paper scheduler refinements (§Perf-S):
+
+  faithful        — the paper's exact BFD + 2D-DP
+  +balance        — balance-aware Stage-1 packing only
+  +serial         — serial small-group fallback only
+  optimized       — both (the production default)
+
+All four run on the same global batches under the same cost model, so
+the rows isolate each refinement's contribution to the end-to-end
+iteration-time estimate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (CostModel, DHPScheduler, analytic_coeffs,
+                        sample_batch, static_plan)
+
+VARIANTS = {
+    "faithful": dict(balance_packing=False, serial_fallback=False),
+    "+balance": dict(balance_packing=True, serial_fallback=False),
+    "+serial": dict(balance_packing=False, serial_fallback=True),
+    "optimized": dict(balance_packing=True, serial_fallback=True),
+}
+
+
+def run(report):
+    cm = CostModel(analytic_coeffs(hidden=3584, n_layers=28, n_heads=28,
+                                   kv_heads=4, ffn=18944, vocab=152000))
+    n_ranks, budget, iters = 64, 3e9, 4
+    rng = np.random.default_rng(11)
+    for ds in ("msrvtt", "openvid"):
+        batches = [sample_batch(ds, 256, rng, max_tokens=262144)
+                   for _ in range(iters)]
+        static_t = sum(
+            static_plan(seqs, cm, n_ranks, budget).total_time_est
+            for seqs in batches)
+        for name, kw in VARIANTS.items():
+            tot, ms = 0.0, 0.0
+            for seqs in batches:
+                plan = DHPScheduler(cm, n_ranks, budget, **kw).schedule(
+                    seqs)
+                tot += plan.total_time_est
+                ms += plan.schedule_ms
+            report(f"ablation/{ds}/{name}", ms / iters * 1e3,
+                   f"iter={tot / iters:.2f}s "
+                   f"speedup_vs_static={static_t / tot:.2f}x")

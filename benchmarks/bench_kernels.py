@@ -1,0 +1,61 @@
+"""Kernel micro-bench: Pallas flash attention (interpret mode) and the
+pure-JAX flash path vs the naive reference — us/call on CPU.
+(Wall-times are CPU-interpret numbers; the TPU story is in §Roofline.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(f, *args, iters=3):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(report):
+    from repro.kernels.ops import flash_attention
+    from repro.models.attention import attn_chunked, attn_reference
+    key = jax.random.PRNGKey(0)
+    B, S, H, Hkv, D = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+
+    t_ref = _time(jax.jit(lambda q, k, v: attn_reference(
+        q, k, v, mode="causal")), q, k, v)
+    report("kernels/attn_reference_512", t_ref, "naive full-matrix")
+    t_chunk = _time(jax.jit(lambda q, k, v: attn_chunked(
+        q, k, v, mode="causal", chunk=128)), q, k, v)
+    report("kernels/attn_chunked_512", t_chunk,
+           f"flash-jnp {t_ref / t_chunk:.2f}x vs ref")
+    t_pal = _time(lambda q, k, v: flash_attention(
+        q, k, v, mode="causal", block_q=128, block_k=128), q, k, v)
+    report("kernels/attn_pallas_interp_512", t_pal,
+           "interpret-mode (correctness harness, not TPU perf)")
+
+    from repro.kernels.rglru_scan import rglru_scan_pallas
+    from repro.kernels.ref import rglru_scan_ref
+    a = jax.random.uniform(key, (2, 512, 256), minval=0.5, maxval=0.99)
+    b = jax.random.normal(jax.random.fold_in(key, 3), (2, 512, 256))
+    t_r = _time(jax.jit(rglru_scan_ref), a, b)
+    report("kernels/rglru_ref_512", t_r, "sequential scan")
+    t_p = _time(lambda a, b: rglru_scan_pallas(a, b, chunk=128), a, b)
+    report("kernels/rglru_pallas_interp_512", t_p, "interpret mode")
+
+    from repro.models.ssm import init_ssm, ssm_forward
+    p_ssm = init_ssm(jax.random.fold_in(key, 4), 64, d_state=32,
+                     head_dim=16, expand=2, conv_width=4,
+                     dtype=jnp.float32)
+    xs = jax.random.normal(jax.random.fold_in(key, 5), (2, 512, 64))
+    fwd = lambda impl: jax.jit(lambda x: ssm_forward(    # noqa: E731
+        p_ssm, x, d_state=32, head_dim=16, expand=2, chunk=64,
+        impl=impl))
+    t_j = _time(fwd("jnp"), xs)
+    report("kernels/ssd_jnp_512", t_j, "chunked dual form, per-head map")
+    t_sp = _time(fwd("pallas"), xs)
+    report("kernels/ssd_pallas_interp_512", t_sp, "interpret mode")

@@ -1,0 +1,19 @@
+"""Figure 5 — token throughput vs NPU count (8..64): DHP holds or grows
+its advantage as the cluster scales (paper: 1.02x -> 1.16x vs DeepSpeed).
+"""
+from __future__ import annotations
+
+from repro.core import CostModel, analytic_coeffs, scaling_table
+
+
+def run(report):
+    cm = CostModel(analytic_coeffs(hidden=4096, n_layers=36, n_heads=32,
+                                   kv_heads=8, ffn=12288, vocab=151674))
+    rows = scaling_table(cm, rank_counts=(8, 16, 32, 64),
+                         mem_budget=8e9, gbs=512, iters=2,
+                         max_tokens=262144)
+    for r in rows:
+        report(f"fig5/ranks{r['ranks']}",
+               1e6 / max(r["dhp_tokens_per_s_per_rank"], 1e-9),
+               f"dhp={r['dhp_tokens_per_s_per_rank']:.0f}tok/s/rank "
+               f"vs_deepspeed={r['dhp_vs_deepspeed']:.2f}x")

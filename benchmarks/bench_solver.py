@@ -1,0 +1,59 @@
+"""Tables 1 & 2 — scheduling / solver time vs GBS and vs rank count.
+
+Paper: solver <= 86 ms (GBS=512, N=64); schedule < 1 s; both << the
+global-batch compute time.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (CostModel, DHPScheduler, analytic_coeffs,
+                        sample_batch)
+
+CM = CostModel(analytic_coeffs(hidden=3584, n_layers=28, n_heads=28,
+                               kv_heads=4, ffn=18944, vocab=152000))
+BUDGET = 8e9
+
+
+def table1_vs_gbs(n_ranks: int = 64, seed: int = 0):
+    rows = []
+    rng = np.random.default_rng(seed)
+    for gbs in (128, 256, 512):
+        seqs = sample_batch("openvid", gbs, rng, max_tokens=262144)
+        sched = DHPScheduler(CM, n_ranks, BUDGET)
+        plan = sched.schedule(seqs)
+        rows.append({
+            "gbs": gbs,
+            "computing_time_s": plan.total_time_est,
+            "schedule_time_ms": plan.schedule_ms,
+            "solver_time_ms": plan.solver_ms,
+        })
+    return rows
+
+
+def table2_vs_ranks(gbs: int = 512, seed: int = 0):
+    rows = []
+    rng = np.random.default_rng(seed)
+    seqs = sample_batch("openvid", gbs, rng, max_tokens=262144)
+    for n in (16, 32, 64):
+        sched = DHPScheduler(CM, n, BUDGET)
+        plan = sched.schedule(seqs)
+        rows.append({
+            "ranks": n,
+            "computing_time_s": plan.total_time_est,
+            "schedule_time_ms": plan.schedule_ms,
+            "solver_time_ms": plan.solver_ms,
+        })
+    return rows
+
+
+def run(report):
+    for r in table1_vs_gbs():
+        report(f"table1/solver_gbs{r['gbs']}", r["solver_time_ms"] * 1e3,
+               f"schedule={r['schedule_time_ms']:.0f}ms "
+               f"compute={r['computing_time_s']:.2f}s "
+               f"overlap_ok={r['schedule_time_ms'] / 1e3 < r['computing_time_s']}")
+    for r in table2_vs_ranks():
+        report(f"table2/solver_n{r['ranks']}", r["solver_time_ms"] * 1e3,
+               f"schedule={r['schedule_time_ms']:.0f}ms "
+               f"compute={r['computing_time_s']:.2f}s")

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1/2  — solver & scheduling latency (paper Tables 1-2)
+  fig4      — end-to-end iteration time + speedup   (Figs. 4 & 6)
+  fig5      — scaling: throughput vs rank count      (Fig. 5)
+  table3    — cost-estimator error                   (Table 3)
+  table4    — case-study CP-group decompositions     (Table 4)
+  kernels   — flash-attention / rglru micro-bench
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_ablation, bench_case_study, bench_end_to_end,
+                   bench_estimator, bench_kernels, bench_scaling,
+                   bench_solver)
+    mods = [("solver", bench_solver), ("end_to_end", bench_end_to_end),
+            ("scaling", bench_scaling), ("estimator", bench_estimator),
+            ("case_study", bench_case_study), ("ablation", bench_ablation),
+            ("kernels", bench_kernels)]
+    print("name,us_per_call,derived")
+    failed = []
+
+    def report(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    for name, mod in mods:
+        try:
+            mod.run(report)
+        except Exception:   # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

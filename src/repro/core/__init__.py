@@ -1,0 +1,30 @@
+"""DHP core — the paper's contribution: dynamic hybrid parallelism.
+
+Public API:
+  CostModel / CostCoeffs / SeqInfo / Hardware   (Eqs. 7-10)
+  pack_sequences / AtomicGroup                  (Stage 1, BFD)
+  allocate / allocate_bruteforce                (Stage 2, 2D-DP, Alg. 1)
+  DHPScheduler / static_plan / ExecutionPlan    (Fig. 3 workflow)
+  Profiler                                      (coefficient fitting)
+  ClusterSimulator / end_to_end_table           (paper-table reproduction)
+"""
+from .allocator import Allocation, allocate, allocate_bruteforce
+from .cost_model import (CostCoeffs, CostModel, Hardware, SeqInfo,
+                         analytic_coeffs)
+from .distributions import DATASETS, sample_batch
+from .packing import AtomicGroup, pack_sequences, validate_packing
+from .profiler import Profiler, profiling_grid
+from .scheduler import (DHPScheduler, ExecutionPlan, GroupPlan,
+                        MicroBatchPlan, MicroBatchPlanner, static_plan)
+from .simulator import ClusterSimulator, end_to_end_table, scaling_table
+
+__all__ = [
+    "Allocation", "allocate", "allocate_bruteforce",
+    "CostCoeffs", "CostModel", "Hardware", "SeqInfo", "analytic_coeffs",
+    "DATASETS", "sample_batch",
+    "AtomicGroup", "pack_sequences", "validate_packing",
+    "Profiler", "profiling_grid",
+    "DHPScheduler", "ExecutionPlan", "GroupPlan", "MicroBatchPlan",
+    "MicroBatchPlanner", "static_plan",
+    "ClusterSimulator", "end_to_end_table", "scaling_table",
+]

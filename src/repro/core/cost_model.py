@@ -1,0 +1,189 @@
+"""DHP cost model — Eqs. (7)-(10) of the paper.
+
+Memory  (Eq. 7):  M(C_p)  = sum_k A_kp |s_k| * M_token + M_ms
+Compute (Eq. 8):  T_cp    = sum_k A_kp (a1 (1+eta_k) |s_k|^2 + a2 |s_k|) + b1
+Comm    (Eq. 9):  T_cm    = (1/v_p) sum_k A_kp a3 |s_k| + b2
+Total   (Eq.10):  T       = T_cp + T_cm - min(T_cpa, T_cma)
+
+The per-rank execution time under CP degree d divides the compute terms
+by d (ring CP splits the sequence evenly); the ring communication volume
+per rank is ~|s|*(d-1)/d (each rank forwards its KV shard d-1 hops), which
+the paper approximates as linear in |s| (Eq. 9 has no explicit d) — we
+keep the exact (d-1)/d factor, which degenerates to the paper's form for
+large d and to zero for d=1 (no ring needed), matching the paper's claim
+that short sequences at low degree avoid redundant communication.
+
+eta_k is the *mask efficiency factor*: the extra attention compute from
+full-attention (vision) tokens relative to causal. eta=0 → pure causal,
+eta=1 → pure full attention (2x the causal FLOPs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence as Seq
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqInfo:
+    """One training sequence (text + vision tokens, already concatenated)."""
+
+    length: int              # total token count |s_k|
+    eta: float = 0.0         # mask efficiency factor (Eq. 8)
+    seq_id: int = -1         # stable id for assignment matrices
+
+    @property
+    def attn_weight(self) -> float:
+        """(1 + eta) |s|^2 — the quadratic attention term."""
+        return (1.0 + self.eta) * float(self.length) ** 2
+
+    @property
+    def linear_weight(self) -> float:
+        return float(self.length)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCoeffs:
+    """Profiled coefficients (seconds). See Profiler for how they are fit."""
+
+    a1: float      # attention compute per (1+eta)|s|^2   [s / token^2]
+    a2: float      # linear (MLP/QKV/...) compute per |s|  [s / token]
+    b1: float      # per-microbatch fixed compute overhead [s]
+    a3: float      # ring comm bytes->time per |s| at unit bandwidth [s*GBps/token]
+    b2: float      # per-microbatch fixed comm overhead    [s]
+    m_token: float # activation bytes per token (Eq. 7)    [bytes/token]
+    m_ms: float    # model-state bytes per rank (ZeRO-3)   [bytes]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    """Bandwidth topology used for v_p in Eq. 9 (GB/s per link)."""
+
+    intra_bw: float = 50.0    # ICI link bandwidth inside a pod / node
+    inter_bw: float = 6.0     # DCI bandwidth across pods / nodes
+    ranks_per_node: int = 8   # ring spanning more than this uses inter_bw
+
+    def ring_bandwidth(self, degree: int) -> float:
+        """Bandwidth of the slowest link in a CP ring of `degree` ranks."""
+        if degree <= 1:
+            return float("inf")
+        return self.intra_bw if degree <= self.ranks_per_node else self.inter_bw
+
+
+class CostModel:
+    """Evaluates Eqs. (7)-(10) for a set of sequences under CP degree d."""
+
+    def __init__(self, coeffs: CostCoeffs, hw: Hardware | None = None):
+        self.coeffs = coeffs
+        self.hw = hw or Hardware()
+
+    # ---- Eq. 7 -----------------------------------------------------------
+    def memory(self, seqs: Seq[SeqInfo]) -> float:
+        """Total activation+state bytes of a CP group (before / d split)."""
+        c = self.coeffs
+        return sum(s.length for s in seqs) * c.m_token + c.m_ms
+
+    def min_degree(self, seqs: Seq[SeqInfo], budget: float) -> int:
+        """d_min = ceil(M / (E * 1)) with per-rank budget E (Eq. 3)."""
+        act = sum(s.length for s in seqs) * self.coeffs.m_token
+        avail = budget - self.coeffs.m_ms
+        if avail <= 0:
+            raise ValueError(
+                f"per-rank budget {budget:.3g} B cannot even hold model "
+                f"states {self.coeffs.m_ms:.3g} B")
+        import math
+        return max(1, math.ceil(act / avail))
+
+    # ---- Eq. 8 -----------------------------------------------------------
+    def compute_time(self, seqs: Seq[SeqInfo], degree: int) -> float:
+        c = self.coeffs
+        attn = c.a1 * sum(s.attn_weight for s in seqs)
+        lin = c.a2 * sum(s.linear_weight for s in seqs)
+        return (attn + lin) / degree + c.b1
+
+    def attn_compute_time(self, seqs: Seq[SeqInfo], degree: int) -> float:
+        """T_cpa: only the attention part (the overlappable compute)."""
+        return self.coeffs.a1 * sum(s.attn_weight for s in seqs) / degree
+
+    # ---- Eq. 9 -----------------------------------------------------------
+    def comm_time(self, seqs: Seq[SeqInfo], degree: int) -> float:
+        if degree <= 1:
+            return 0.0
+        c = self.coeffs
+        v = self.hw.ring_bandwidth(degree)
+        vol = c.a3 * sum(s.length for s in seqs) * (degree - 1) / degree
+        return vol / v + c.b2
+
+    def attn_comm_time(self, seqs: Seq[SeqInfo], degree: int) -> float:
+        """T_cma: the KV-ring traffic (all of Eq. 9's variable part)."""
+        if degree <= 1:
+            return 0.0
+        c = self.coeffs
+        v = self.hw.ring_bandwidth(degree)
+        return c.a3 * sum(s.length for s in seqs) * (degree - 1) / degree / v
+
+    # ---- Eq. 10 ----------------------------------------------------------
+    def group_time(self, seqs: Seq[SeqInfo], degree: int) -> float:
+        """Estimated wall time of one CP group executing its sequences."""
+        if not seqs:
+            return 0.0
+        t_cp = self.compute_time(seqs, degree)
+        t_cm = self.comm_time(seqs, degree)
+        t_cpa = self.attn_compute_time(seqs, degree)
+        t_cma = self.attn_comm_time(seqs, degree)
+        return t_cp + t_cm - min(t_cpa, t_cma)
+
+    def time_fn(self) -> Callable[[Seq[SeqInfo], int], float]:
+        return self.group_time
+
+
+def analytic_coeffs(
+    *,
+    hidden: int,
+    n_layers: int,
+    n_heads: int,
+    kv_heads: int,
+    ffn: int,
+    vocab: int,
+    dtype_bytes: int = 2,
+    peak_flops: float = 197e12,     # TPU v5e bf16
+    mfu: float = 0.45,
+    params: float | None = None,
+    zero_shards: int = 64,
+) -> CostCoeffs:
+    """Roofline-derived coefficients for a transformer of the given shape.
+
+    Used when no measured profile is available (the Profiler refines these
+    by fitting measured samples, reproducing the paper's <8% error claim).
+    Training step FLOPs ~ 3x forward (fwd + 2x bwd).
+    """
+    head_dim = hidden // n_heads
+    # attention: QK^T + AV = 2 * 2 * L^2 * hidden FLOPs per layer (causal
+    # halves it; eta interpolates back up -> fold the 1/2 into a1).
+    attn_flops_per_tok2 = 3 * 2 * 2 * hidden * n_layers * 0.5
+    # linear: qkv + o + mlp (+ lm head amortized)
+    lin_flops_per_tok = 3 * 2 * (
+        hidden * (hidden + 2 * kv_heads * head_dim)  # qkv
+        + hidden * hidden                             # out proj
+        + 3 * hidden * ffn                            # swiglu mlp
+    ) * n_layers + 3 * 2 * hidden * vocab
+    eff = peak_flops * mfu
+    n_params = params if params is not None else (
+        n_layers * (hidden * (hidden + 2 * kv_heads * head_dim)
+                    + hidden * hidden + 3 * hidden * ffn)
+        + vocab * hidden)
+    # activation bytes/token: per layer ~ (attn intermediates + mlp) in bf16,
+    # with activation checkpointing keeping ~4*hidden + ffn per layer resident.
+    m_token = dtype_bytes * n_layers * (4 * hidden + ffn) * 0.25
+    # ZeRO-3: params+grads+optimizer(fp32 m,v,master) / shards
+    m_ms = n_params * (2 + 2 + 12) / zero_shards
+    # ring comm: 2 (K and V) * kv_heads*head_dim * bytes per token per hop
+    a3 = 2 * kv_heads * head_dim * dtype_bytes / 1e9  # GB per token-hop
+    return CostCoeffs(
+        a1=attn_flops_per_tok2 / eff,
+        a2=lin_flops_per_tok / eff,
+        b1=2e-3,
+        a3=a3,
+        b2=1e-4,
+        m_token=m_token,
+        m_ms=m_ms,
+    )

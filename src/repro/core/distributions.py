@@ -1,0 +1,64 @@
+"""Synthetic multimodal sequence-length distributions (paper Fig. 1).
+
+The paper evaluates on MSRVTT, InternVid, and OpenVid; their duration
+histograms (Fig. 1) show: MSRVTT — clips 10-30 s, fairly uniform;
+InternVid — broad, most < 8 s with a tail; OpenVid — extreme long tail
+(most < 8 s, a few > 64 s). We model durations with truncated lognormals
+calibrated to those summaries and convert to token counts:
+
+  tokens = duration * fps * tokens_per_frame  (vision, full attention)
+         + text_tokens                        (caption, causal)
+
+eta (Eq. 8's mask-efficiency factor) is the vision-token fraction: a clip
+whose tokens are mostly full-attention vision tokens approaches eta=1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from .cost_model import SeqInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class VideoDataset:
+    name: str
+    mu: float        # lognormal mean of log-duration (seconds)
+    sigma: float     # lognormal sigma — the long-tail knob
+    min_s: float
+    max_s: float
+
+
+MSRVTT = VideoDataset("msrvtt", mu=np.log(15.0), sigma=0.35, min_s=10, max_s=32)
+INTERNVID = VideoDataset("internvid", mu=np.log(6.0), sigma=0.8, min_s=1, max_s=128)
+OPENVID = VideoDataset("openvid", mu=np.log(5.0), sigma=1.25, min_s=1, max_s=512)
+
+DATASETS = {d.name: d for d in (MSRVTT, INTERNVID, OPENVID)}
+
+
+def sample_batch(
+    dataset: str | VideoDataset,
+    n: int,
+    rng: np.random.Generator,
+    *,
+    fps: float = 1.0,
+    tokens_per_frame: int = 256,
+    text_tokens: int = 128,
+    max_tokens: int | None = None,
+) -> List[SeqInfo]:
+    """Draw a global batch of n multimodal sequences."""
+    ds = DATASETS[dataset] if isinstance(dataset, str) else dataset
+    dur = rng.lognormal(ds.mu, ds.sigma, size=n)
+    dur = np.clip(dur, ds.min_s, ds.max_s)
+    out: List[SeqInfo] = []
+    for i, t in enumerate(dur):
+        vis = int(t * fps) * tokens_per_frame
+        total = vis + text_tokens
+        if max_tokens is not None:
+            total = min(total, max_tokens)
+            vis = min(vis, total - 1)
+        eta = vis / total  # fraction of full-attention tokens
+        out.append(SeqInfo(length=int(total), eta=float(eta), seq_id=i))
+    return out

@@ -1,0 +1,87 @@
+"""Dynamic group management & pooling (§5 Implementation (1)).
+
+The paper pools HCCL communication groups because creating them per batch
+is expensive. The JAX analogue: the expensive per-configuration artifacts
+are `jax.sharding.Mesh` objects over device subsets and, above all,
+*compiled executables* (XLA compilation replaces NCCL/HCCL group setup as
+the dominant reconfiguration cost). `GroupPool` caches both:
+
+  * `mesh_for(start, degree)`   — a (cp, model)-axis mesh over the device
+    slice [start, start+degree) of the replica grid;
+  * `executable_for(key, build)`— memoized compiled step functions keyed
+    by (degree, padded sequence bucket, microbatch rows, ...).
+
+Sequence lengths are bucketed (pow-2 padding by default) so the number of
+distinct executables stays bounded over a training run — mirroring the
+paper's observation that "the total number of unique groups required is
+limited".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Hashable, Tuple
+
+import numpy as np
+
+
+def pow2_bucket(n: int, minimum: int = 128) -> int:
+    """Smallest power-of-two >= n (>= minimum) — the padding bucket."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class PoolStats:
+    mesh_hits: int = 0
+    mesh_misses: int = 0
+    exe_hits: int = 0
+    exe_misses: int = 0
+
+
+class GroupPool:
+    """Cache of sub-meshes and compiled executables for CP groups."""
+
+    def __init__(self, devices, model_axis: int = 1,
+                 axis_names: Tuple[str, str] = ("cp", "model")):
+        """`devices`: flat list of devices, viewed as a
+        (n_replicas, model_axis) grid. model_axis=1 means a replica is a
+        single device (TP folded away — the CPU-demo case)."""
+        self.devices = np.asarray(devices).reshape(-1, model_axis)
+        self.n_replicas = self.devices.shape[0]
+        self.model_axis = model_axis
+        self.axis_names = axis_names
+        self._meshes: Dict[Tuple[int, int], Any] = {}
+        self._exes: Dict[Hashable, Any] = {}
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------
+    def mesh_for(self, start: int, degree: int):
+        """Mesh over replicas [start, start+degree) — a CP ring of size
+        `degree` x the static model (TP) axis."""
+        from jax.sharding import Mesh
+        key = (start, degree)
+        if key in self._meshes:
+            self.stats.mesh_hits += 1
+            return self._meshes[key]
+        self.stats.mesh_misses += 1
+        assert start + degree <= self.n_replicas, (start, degree)
+        devs = self.devices[start:start + degree]
+        mesh = Mesh(devs, self.axis_names)
+        self._meshes[key] = mesh
+        return mesh
+
+    # ------------------------------------------------------------------
+    def executable_for(self, key: Hashable, build: Callable[[], Any]):
+        """Memoized compile: `build()` is invoked only on pool miss."""
+        if key in self._exes:
+            self.stats.exe_hits += 1
+            return self._exes[key]
+        self.stats.exe_misses += 1
+        exe = build()
+        self._exes[key] = exe
+        return exe
+
+    def __len__(self) -> int:
+        return len(self._exes)

@@ -1,0 +1,275 @@
+"""DHP Scheduler — overall workflow of Fig. 3.
+
+Global batch --(micro-batch planner)--> micro-batches
+ --(Stage 1: memory-aware BFD packing)--> atomic groups
+ --(Stage 2: 2D-DP allocator)--> CP degrees + assignment
+ --> ExecutionPlan consumed by the executor.
+
+The scheduler is pure host-side Python (numpy-free hot path) so it can
+run asynchronously with device computation — `prepare()` schedules the
+*next* batch on a background thread while the accelerator crunches the
+current one, reproducing the paper's producer-consumer decoupling
+(§5 Implementation (2)).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import time
+from typing import List, Optional, Sequence as Seq
+
+from .allocator import Allocation, allocate
+from .cost_model import CostModel, SeqInfo
+from .packing import AtomicGroup, pack_sequences
+
+
+@dataclasses.dataclass
+class GroupPlan:
+    """One CP group within a micro-batch: which sequences, what degree."""
+
+    seq_ids: List[int]
+    degree: int
+    est_time: float
+    tokens: int
+
+
+@dataclasses.dataclass
+class MicroBatchPlan:
+    groups: List[GroupPlan]
+    makespan: float            # max est_time (the DP objective, Eq. 2)
+    ranks_used: int
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    micro_batches: List[MicroBatchPlan]
+    total_time_est: float
+    schedule_ms: float         # end-to-end scheduling latency (Table 1/2)
+    solver_ms: float           # 2D-DP time alone (Table 1/2)
+
+    @property
+    def degree_histogram(self) -> dict:
+        """{degree: count} across all micro-batches — Table 4 case study."""
+        h: dict = {}
+        for mb in self.micro_batches:
+            for g in mb.groups:
+                h[g.degree] = h.get(g.degree, 0) + 1
+        return dict(sorted(h.items(), reverse=True))
+
+
+class MicroBatchPlanner:
+    """Chunks a global batch into micro-batches under a token budget.
+
+    Sequences are sorted descending and bucketed so each micro-batch's
+    total activation footprint fits the cluster (N ranks x E budget) —
+    the necessary feasibility condition for Stage 1.
+    """
+
+    def __init__(self, cost_model: CostModel, n_ranks: int, budget: float):
+        self.cm = cost_model
+        self.n_ranks = n_ranks
+        self.budget = budget
+
+    def plan(self, seqs: Seq[SeqInfo]) -> List[List[SeqInfo]]:
+        c = self.cm.coeffs
+        cap = (self.budget - c.m_ms) * self.n_ranks
+        order = sorted(seqs, key=lambda s: s.length, reverse=True)
+        micro: List[List[SeqInfo]] = []
+        cur: List[SeqInfo] = []
+        used = 0.0
+        for s in order:
+            need = s.length * c.m_token
+            if cur and used + need > cap:
+                micro.append(cur)
+                cur, used = [], 0.0
+            cur.append(s)
+            used += need
+        if cur:
+            micro.append(cur)
+        return micro
+
+
+def _feasible_waves(groups, n_ranks):
+    """Partition atomic groups into waves with sum(d_min) <= n_ranks.
+
+    Greedy first-fit-decreasing on d_min; each wave is scheduled by one
+    2D-DP call and waves execute back-to-back.
+    """
+    waves, loads = [], []
+    for g in sorted(groups, key=lambda g: g.d_min, reverse=True):
+        for i, load in enumerate(loads):
+            if load + g.d_min <= n_ranks:
+                waves[i].append(g)
+                loads[i] += g.d_min
+                break
+        else:
+            waves.append([g])
+            loads.append(g.d_min)
+    return waves
+
+
+class DHPScheduler:
+    """The paper's Scheduler class (§5): plans one global batch."""
+
+    def __init__(
+        self,
+        cost_model: CostModel,
+        n_ranks: int,
+        mem_budget: float,
+        *,
+        use_all_ranks: bool = True,
+        balance_packing: bool = True,
+        serial_fallback: bool = True,
+    ):
+        """`balance_packing` and `serial_fallback` are BEYOND-PAPER
+        refinements (see EXPERIMENTS.md §Perf); disable both for the
+        paper-faithful scheduler."""
+        self.cm = cost_model
+        self.n_ranks = n_ranks
+        self.budget = mem_budget
+        self.use_all_ranks = use_all_ranks
+        self.balance_packing = balance_packing
+        self.serial_fallback = serial_fallback
+        self.planner = MicroBatchPlanner(cost_model, n_ranks, mem_budget)
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[concurrent.futures.Future] = None
+
+    # -- synchronous API ----------------------------------------------------
+    def schedule(self, seqs: Seq[SeqInfo]) -> ExecutionPlan:
+        t0 = time.perf_counter()
+        micro_plans: List[MicroBatchPlan] = []
+        solver_ms = 0.0
+        for mb in self.planner.plan(seqs):
+            all_groups = pack_sequences(
+                mb, self.cm, self.budget, max_degree=self.n_ranks,
+                balance_over=self.n_ranks if self.balance_packing
+                else None)
+            # BFD fragmentation can leave sum(d_min) > N for one wave;
+            # partition atomic groups into sequential feasible waves.
+            for groups in _feasible_waves(all_groups, self.n_ranks):
+                alloc: Allocation = allocate(
+                    groups, self.n_ranks, self.cm.group_time,
+                    use_all_ranks=self.use_all_ranks)
+                solver_ms += alloc.solver_ms
+                # BEYOND-PAPER: serial fallback. The DP runs the wave's
+                # groups CONCURRENTLY on disjoint rank sets (Eq. 2-6);
+                # when per-group imbalance exceeds the ring-comm cost of
+                # width-N groups, running them back-to-back at full
+                # degree is faster (dominates at small N). Take the min.
+                serial = [self.cm.group_time(g.seqs, self.n_ranks)
+                          for g in groups]
+                if self.serial_fallback and sum(serial) < alloc.makespan:
+                    for g, t in zip(groups, serial):
+                        micro_plans.append(MicroBatchPlan(
+                            groups=[GroupPlan(
+                                seq_ids=[s.seq_id for s in g.seqs],
+                                degree=self.n_ranks, est_time=t,
+                                tokens=g.total_tokens)],
+                            makespan=t, ranks_used=self.n_ranks))
+                    continue
+                gplans = [
+                    GroupPlan(
+                        seq_ids=[s.seq_id for s in g.seqs],
+                        degree=d,
+                        est_time=self.cm.group_time(g.seqs, d),
+                        tokens=g.total_tokens,
+                    )
+                    for g, d in zip(groups, alloc.degrees)
+                ]
+                micro_plans.append(MicroBatchPlan(
+                    groups=gplans, makespan=alloc.makespan,
+                    ranks_used=alloc.ranks_used))
+        schedule_ms = (time.perf_counter() - t0) * 1e3
+        return ExecutionPlan(
+            micro_batches=micro_plans,
+            total_time_est=sum(m.makespan for m in micro_plans),
+            schedule_ms=schedule_ms,
+            solver_ms=solver_ms,
+        )
+
+    # -- asynchronous producer-consumer API ----------------------------------
+    def prepare(self, next_seqs: Seq[SeqInfo]) -> None:
+        """Kick off scheduling of the NEXT batch on the host thread."""
+        self._pending = self._pool.submit(self.schedule, list(next_seqs))
+
+    def collect(self) -> ExecutionPlan:
+        """Block until the prepared plan is ready (usually already done)."""
+        assert self._pending is not None, "prepare() was never called"
+        plan = self._pending.result()
+        self._pending = None
+        return plan
+
+
+def static_plan(
+    seqs: Seq[SeqInfo],
+    cost_model: CostModel,
+    n_ranks: int,
+    mem_budget: float,
+    *,
+    degree: Optional[int] = None,
+    power_of_two: bool = False,
+) -> ExecutionPlan:
+    """Static-parallelism baseline (Megatron-LM / DeepSpeed style).
+
+    One fixed CP degree for every group, sized for the LONGEST sequence
+    in the batch (how a practitioner must configure a static system).
+    `power_of_two=True` additionally rounds the degree up to a power of
+    two (DeepSpeed-Ulysses head-divisibility restriction, §4.1).
+
+    The cluster forms floor(N/d) concurrent DP x CP groups; sequences are
+    dealt round-robin in arrival order (static systems are not
+    load-aware — this IS the pathology of Fig. 2). Each group chunks its
+    share into memory-feasible micro-batches processed sequentially; the
+    iteration time is the max over groups (synchronous gradient update).
+    """
+    t0 = time.perf_counter()
+    cm = cost_model
+    if degree is None:
+        degree = max(cm.min_degree([s], mem_budget) for s in seqs)
+    if power_of_two:
+        d = 1
+        while d < degree:
+            d *= 2
+        degree = d
+    degree = min(degree, n_ranks)
+    cap = (mem_budget - cm.coeffs.m_ms) * degree
+    n_groups = max(1, n_ranks // degree)
+
+    shares: List[List[SeqInfo]] = [[] for _ in range(n_groups)]
+    for i, s in enumerate(seqs):
+        shares[i % n_groups].append(s)
+
+    def group_total(share: List[SeqInfo]) -> tuple[float, List[GroupPlan]]:
+        """Sequentially process micro-batches that fit d*E_act memory."""
+        total, plans = 0.0, []
+        cur: List[SeqInfo] = []
+        used = 0.0
+        for s in share:
+            need = s.length * cm.coeffs.m_token
+            if cur and used + need > cap:
+                t = cm.group_time(cur, degree)
+                plans.append(GroupPlan([x.seq_id for x in cur], degree, t,
+                                       sum(x.length for x in cur)))
+                total += t
+                cur, used = [], 0.0
+            cur.append(s)
+            used += need
+        if cur:
+            t = cm.group_time(cur, degree)
+            plans.append(GroupPlan([x.seq_id for x in cur], degree, t,
+                                   sum(x.length for x in cur)))
+            total += t
+        return total, plans
+
+    gplans: List[GroupPlan] = []
+    lane_times = []
+    for share in shares:
+        t, plans = group_total(share)
+        lane_times.append(t)
+        gplans.extend(plans)
+    total = max(lane_times)
+    micro = [MicroBatchPlan(groups=gplans, makespan=total,
+                            ranks_used=n_groups * degree)]
+    ms = (time.perf_counter() - t0) * 1e3
+    return ExecutionPlan(micro_batches=micro, total_time_est=total,
+                         schedule_ms=ms, solver_ms=0.0)

@@ -1,0 +1,97 @@
+"""Heterogeneous multimodal data pipeline (synthetic, deterministic).
+
+Generates the kind of batches DHP schedules: variable-length multimodal
+sequences drawn from the paper's dataset distributions (core/
+distributions.py), each a (vision-tokens + text-tokens) pair. Provides:
+
+  * `HeterogeneousLoader` — yields global batches of SeqInfo + token
+    arrays, the DHP scheduler's input;
+  * `padded_batch(...)` — pads a set of sequences to a bucket for one
+    CP-group micro-step (tokens, labels, mask, positions);
+  * `synthetic_batch(cfg, shape)` — fixed-shape batch for dry-runs /
+    benchmarks / examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence as Seq
+
+import numpy as np
+
+from ..configs.base import InputShape, ModelConfig
+from ..core.cost_model import SeqInfo
+from ..core.distributions import sample_batch
+
+
+@dataclasses.dataclass
+class RaggedBatch:
+    infos: List[SeqInfo]
+    tokens: List[np.ndarray]       # per-sequence token ids (int32)
+
+    def by_id(self, seq_id: int) -> np.ndarray:
+        return self.tokens[seq_id]
+
+
+class HeterogeneousLoader:
+    """Iterator of ragged global batches from a video-length distribution."""
+
+    def __init__(self, dataset: str, gbs: int, vocab: int, *,
+                 seed: int = 0, max_tokens: Optional[int] = None,
+                 tokens_per_frame: int = 256):
+        self.dataset = dataset
+        self.gbs = gbs
+        self.vocab = vocab
+        self.max_tokens = max_tokens
+        self.tokens_per_frame = tokens_per_frame
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self) -> Iterator[RaggedBatch]:
+        return self
+
+    def __next__(self) -> RaggedBatch:
+        infos = sample_batch(self.dataset, self.gbs, self.rng,
+                             max_tokens=self.max_tokens,
+                             tokens_per_frame=self.tokens_per_frame)
+        toks = [self.rng.integers(0, self.vocab, size=s.length,
+                                  dtype=np.int32) for s in infos]
+        return RaggedBatch(infos=infos, tokens=toks)
+
+
+def padded_batch(seqs: Seq[np.ndarray], bucket: int,
+                 pad_id: int = 0) -> Dict[str, np.ndarray]:
+    """Pad ragged sequences to [n, bucket]: tokens/labels/mask/positions."""
+    n = len(seqs)
+    tokens = np.full((n, bucket), pad_id, np.int32)
+    mask = np.zeros((n, bucket), np.float32)
+    for i, s in enumerate(seqs):
+        L = min(len(s), bucket)
+        tokens[i, :L] = s[:L]
+        mask[i, :L] = 1.0
+        mask[i, L - 1] = 0.0   # last valid token has no next-token label
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = pad_id
+    positions = np.tile(np.arange(bucket, dtype=np.int32), (n, 1))
+    return {"tokens": tokens, "labels": labels, "mask": mask,
+            "positions": positions}
+
+
+def synthetic_batch(cfg: ModelConfig, shape: InputShape,
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    """Fixed-shape (global_batch, seq_len) batch matching input_specs."""
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": rng.integers(0, cfg.vocab, (B, S)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab, (B, S)).astype(np.int32),
+    }
+    if cfg.family == "vlm":
+        P = max(1, int(S * cfg.vlm.patches_per_seq_frac))
+        batch["patch_embeds"] = rng.normal(
+            0, 1, (B, P, cfg.vlm.vision_dim)).astype(np.float32)
+        pos = np.tile(np.arange(P, dtype=np.int32), (B, 1))
+        batch["patch_pos"] = pos
+    if cfg.family == "audio":
+        F = cfg.encdec.n_audio_frames
+        batch["frames"] = rng.normal(0, 1, (B, F, cfg.d_model)).astype(
+            np.float32)
+    return batch

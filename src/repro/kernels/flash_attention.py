@@ -1,0 +1,150 @@
+"""Pallas TPU flash-attention kernel.
+
+The compute hot-spot DHP's cost model centres on (the a1*(1+eta)|s|^2
+term of Eq. 8). TPU-native design, not a CUDA port:
+
+  * grid = (batch*heads, num_q_blocks, num_kv_blocks); the LAST axis is
+    sequential on TPU, so the online-softmax running state (m, l, acc)
+    lives in VMEM scratch carried across kv iterations — the TPU analogue
+    of a CUDA persistent-CTA loop.
+  * BlockSpecs tile Q/K/V into (BLOCK_Q x HEAD_DIM) / (BLOCK_K x
+    HEAD_DIM) VMEM windows; 128-multiples align with MXU systolic tiles
+    and the (8,128) VREG lanes.
+  * mask modes: causal / full / sliding(window) + a kv_offset so the
+    SAME kernel computes each hop of ring attention (KV blocks arriving
+    from a ppermute neighbour carry their global offset).
+  * causal/sliding hops skip fully-masked KV blocks via pl.when —
+    compute truly drops, unlike a masked dense matmul.
+
+Validated against ref.flash_attention_ref in interpret mode (CPU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            mode: str, window: Optional[int], sm_scale: float,
+            block_q: int, block_k: int, kv_offset: int, kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this tile
+    q_start = qi * block_q
+    k_start = kv_offset + ki * block_k
+
+    # block-level skip: entire KV tile masked out?
+    if mode == "full":
+        full_skip = False
+    elif mode == "causal":
+        # kv block strictly after the last q row -> skip
+        full_skip = k_start > q_start + block_q - 1
+    else:  # sliding
+        full_skip = jnp.logical_or(
+            k_start > q_start + block_q - 1,
+            k_start + block_k - 1 <= q_start - window)
+
+    @pl.when(jnp.logical_not(full_skip) if mode != "full" else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # [bq, bk]
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = kpos < kv_offset + kv_len           # tail padding
+        if mode != "full":
+            mask &= kpos <= qpos
+            if mode == "sliding":
+                mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "window", "block_q", "block_k", "kv_offset",
+                     "interpret"))
+def flash_attention_flat(q, k, v, *, mode: str = "causal",
+                         window: Optional[int] = None,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         kv_offset: int = 0,
+                         interpret: bool = True) -> jax.Array:
+    """q: [BH, Sq, D]; k/v: [BH, Sk, D] (KV pre-expanded to all heads).
+
+    `interpret=True` runs the kernel body on CPU (this container);
+    compile for real TPUs with interpret=False.
+    """
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0))) if pad_k else v
+    nq = (Sq + pad_q) // block_q
+    nk = (Sk + pad_k) // block_k
+
+    kernel = functools.partial(
+        _kernel, mode=mode, window=window, sm_scale=1.0 / math.sqrt(D),
+        block_q=block_q, block_k=block_k, kv_offset=kv_offset, kv_len=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pad_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, mode: str = "causal",
+                        window: Optional[int] = None,
+                        q_offset: int = 0) -> jax.Array:
+    """q: [BH, Sq, D], k/v: [BH, Sk, D] (heads pre-flattened, KV already
+    expanded to full heads). fp32 softmax, same-dtype output as q."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    if mode == "full":
+        m = jnp.ones((Sq, Sk), bool)
+    else:
+        m = kpos[None, :] <= qpos[:, None]
+        if mode == "sliding":
+            assert window is not None
+            m &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(m[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_chunk_ref(C, B, x, da, dt):
+    """Oracle for the SSD intra-chunk step (ssd_chunk.py).
+
+    C, B: [G,c,N]; x: [G,c,P]; da, dt: [G,c] →
+    (y_intra [G,c,P], states [G,N,P], cum [G,c]), fp32.
+    """
+    C = C.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    da = da.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    c = C.shape[1]
+    cum = jnp.cumsum(da, axis=1)                           # [G,c]
+    diff = cum[:, :, None] - cum[:, None, :]
+    tril = jnp.tril(jnp.ones((c, c), bool))
+    L = jnp.where(tril[None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("gin,gjn->gij", C, B) * L * dt[:, None, :]
+    y = jnp.einsum("gij,gjp->gip", scores, x)
+    decay_end = jnp.exp(cum[:, -1:] - cum) * dt            # [G,c]
+    states = jnp.einsum("gjn,gj,gjp->gnp", B, decay_end, x)
+    return y, states, cum
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sequential oracle for h_t = a_t * h_{t-1} + b_t. a,b: [B,S,W]."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.swapaxes(a, 0, 1)
+    b_t = jnp.swapaxes(b, 0, 1)
+    h0 = jnp.zeros_like(a[:, 0])
+    _, hs = jax.lax.scan(step, h0, (a_t, b_t))
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -------------------------------------
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                            # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config)  # noqa: E402
+from ..models.model import forward, prefill        # noqa: E402
+from ..parallel.act_sharding import activation_constraints  # noqa: E402
+from ..parallel.sharding import (batch_specs, cache_specs, data_axes,
+                                 param_specs)      # noqa: E402
+from ..serving.serve_step import make_serve_step   # noqa: E402
+from ..training.train_step import TrainState, make_train_step  # noqa: E402
+from .mesh import make_production_mesh             # noqa: E402
+from .roofline import analyze, model_flops         # noqa: E402
+from .specs import (abstract_cache, abstract_params, abstract_state,
+                    accum_for, dryrun_config, input_specs,
+                    optimizer_for)  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile EVERY (arch x input-shape) on the
+single-pod (16,16) and multi-pod (2,16,16) production meshes, printing
+memory_analysis() and cost_analysis() and writing a JSON record per pair
+for §Dry-run / §Roofline of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+
+def _shard(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool,
+               fsdp: bool = True, donate: bool = True,
+               variant: Optional[dict] = None):
+    """Returns (lowered, compiled, meta) for one (arch, shape, mesh).
+
+    `variant` — §Perf hillclimb switches (all default off = baseline):
+      moe_dispatch: "sort"|"einsum"   MoE dispatch formulation
+      sp: bool                        Megatron-SP sequence-sharded acts
+      grad_rs: bool                   reduce-scatter grad accumulator
+      accum: int                      override gradient-accumulation depth
+      tp: int                         single-pod mesh split (data=256/tp)
+    """
+    variant = variant or {}
+    tp = int(variant.get("tp") or 16)
+    mesh = make_production_mesh(multi_pod=multi_pod, dp=256 // tp, tp=tp)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = dryrun_config(get_config(arch), shape)
+    if variant.get("moe_dispatch") and cfg.moe is not None:
+        import dataclasses as _dc
+        cfg = cfg.with_(moe=_dc.replace(cfg.moe,
+                                        dispatch=variant["moe_dispatch"]))
+    daxes = data_axes(mesh)
+
+    with mesh, activation_constraints(
+            mesh, daxes, batch_sharded=shape.global_batch > 1,
+            sp=bool(variant.get("sp"))):
+        if shape.kind == "train":
+            opt = optimizer_for(cfg)
+            data_ways = mesh.shape["data"] * mesh.shape.get("pod", 1)
+            state = abstract_state(cfg, opt)
+            pspecs = param_specs(state.params, cfg, fsdp=fsdp, mesh=mesh)
+            grad_constraint = None
+            if variant.get("grad_rs"):
+                def grad_constraint(g, _ps=pspecs, _mesh=mesh):
+                    return jax.tree.map(
+                        lambda x, s: jax.lax.with_sharding_constraint(
+                            x, NamedSharding(_mesh, s)), g, _ps)
+            step = make_train_step(
+                cfg, opt,
+                accum_steps=variant.get("accum") or accum_for(
+                    cfg, shape, data_ways),
+                grad_constraint=grad_constraint)
+            sspecs = TrainState(
+                params=pspecs,
+                opt=type(state.opt)(step=P(), m=pspecs, v=pspecs))
+            bspecs = {k: v for k, v in
+                      batch_specs(cfg, shape, mesh).items()}
+            inputs = input_specs(cfg, shape)
+            bspecs = {k: bspecs[k] for k in inputs}
+            jitted = jax.jit(
+                step,
+                in_shardings=(_shard(mesh, sspecs), _shard(mesh, bspecs)),
+                out_shardings=(_shard(mesh, sspecs),
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state, inputs)
+        elif shape.kind == "prefill":
+            params = abstract_params(cfg)
+            pspecs = param_specs(params, cfg, fsdp=fsdp, mesh=mesh)
+            inputs = input_specs(cfg, shape)
+            bspecs = {k: v for k, v in
+                      batch_specs(cfg, shape, mesh).items()
+                      if k in inputs}
+
+            if cfg.family in ("dense", "moe", "vlm"):
+                def fn(p, batch):
+                    return prefill(p, cfg, batch,
+                                   cache_len=shape.seq_len)
+            else:
+                def fn(p, batch):
+                    logits, _ = forward(p, cfg, batch)
+                    return logits[:, -1:]
+            jitted = jax.jit(
+                fn, in_shardings=(_shard(mesh, pspecs),
+                                  _shard(mesh, bspecs)))
+            lowered = jitted.lower(params, inputs)
+        else:  # decode
+            params = abstract_params(cfg)
+            pspecs = param_specs(params, cfg, fsdp=fsdp, mesh=mesh)
+            cache = abstract_cache(cfg, shape)
+            cspecs = cache_specs(cfg, shape, mesh)
+            tspec = P(daxes if shape.global_batch > 1 else None)
+            serve = make_serve_step(cfg)
+            jitted = jax.jit(
+                serve,
+                in_shardings=(_shard(mesh, pspecs), _shard(mesh, cspecs),
+                              NamedSharding(mesh, tspec)),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params, cache,
+                                   input_specs(cfg, shape)["tokens"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    meta = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "n_devices": mesh.size, "compile_s": compile_s,
+            "kind": shape.kind}
+    return lowered, compiled, meta
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str, fsdp: bool = True, quiet: bool = False,
+             variant: Optional[dict] = None, tag: str = "") -> dict:
+    lowered, compiled, meta = lower_pair(arch, shape_name,
+                                         multi_pod=multi_pod, fsdp=fsdp,
+                                         variant=variant)
+    if variant:
+        meta["variant"] = variant
+    mem = compiled.memory_analysis()
+    rec = dict(meta)
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    text = compiled.as_text()
+    roof = analyze(compiled, meta["n_devices"], hlo_text=text)
+    rec["roofline"] = roof.as_dict()
+    from .roofline import analyze_raw
+    rec["roofline_raw_costanalysis"] = analyze_raw(
+        compiled, meta["n_devices"], hlo_text=text).as_dict()
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mf = model_flops(cfg, shape)
+    rec["model_flops_total"] = mf
+    dev_flops = roof.flops
+    rec["useful_flops_ratio"] = (
+        mf / meta["n_devices"] / dev_flops if dev_flops else None)
+    if not quiet:
+        print(f"== {arch} x {shape_name} [{rec['mesh']}] "
+              f"compile={meta['compile_s']:.1f}s")
+        print("   memory_analysis:", rec["memory"])
+        print("   roofline:", {k: (f"{v:.3e}" if isinstance(v, float)
+                                   else v)
+                               for k, v in rec["roofline"].items()
+                               if not isinstance(v, dict)})
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir,
+                      f"{arch}__{shape_name}__{rec['mesh']}{tag}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    pairs = []
+    archs = ASSIGNED_ARCHS if args.all else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    failures = []
+    for a, s, mp in pairs:
+        mesh_name = "2x16x16" if mp else "16x16"
+        fn = os.path.join(args.out, f"{a}__{s}__{mesh_name}.json")
+        if args.skip_existing and os.path.exists(fn):
+            print(f"-- skip {a} x {s} [{mesh_name}] (exists)")
+            continue
+        try:
+            run_pair(a, s, multi_pod=mp, out_dir=args.out)
+        except Exception as e:   # noqa: BLE001
+            failures.append((a, s, mp, repr(e)))
+            print(f"!! FAIL {a} x {s} [{mesh_name}]: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

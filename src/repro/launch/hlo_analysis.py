@@ -1,0 +1,427 @@
+"""Trip-count-aware HLO analysis.
+
+XLA's `compiled.cost_analysis()` counts each `while` body ONCE, so any
+scan-over-layers model under-reports FLOPs / bytes / collective traffic
+by ~n_layers x accum_steps. This module re-derives the roofline inputs
+from the partitioned HLO text with loop multipliers:
+
+  * computations are parsed into {name -> instructions};
+  * `while` ops contribute their body's totals x trip count (recovered
+    from the `constant(N)` in the loop's condition computation);
+  * `fusion` ops contribute their called computation's DOT FLOPs but not
+    its internal memory traffic (fusion internals stay in registers);
+  * dot FLOPs = 2 * prod(output dims) * prod(lhs contracting dims);
+  * memory traffic = operand + output bytes of each materialized
+    instruction (top-level ops and fusion boundaries — the HBM picture);
+  * collective bytes by kind from output shapes (async -start/-done
+    pairs counted once).
+
+All numbers are PER DEVICE (the HLO is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)"
+    r"\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(%[\w.\-]+|ENTRY\s+%?[\w.\-]+)\s*\(.*\{$")
+
+
+def _shape_dims(shape: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(shape: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.match(r"^(ENTRY\s+)?(%?[\w.\-]+)", line)
+            if m:
+                name = m.group(2)
+                cur = Computation(name=name, instrs=[], shapes={})
+                comps[name] = cur
+                if m.group(1):
+                    comps["__ENTRY__"] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        instr = Instr(name=im.group(1), shape=im.group(2),
+                      op=im.group(3), rest=im.group(4))
+        cur.instrs.append(instr)
+        cur.shapes[instr.name] = instr.shape
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = 1
+    dims_list = _shape_dims(instr.shape)
+    if not dims_list:
+        return 0.0
+    for d in dims_list[0][1]:
+        out_elems *= d
+    m = re.match(r"\s*(%[\w.\-]+)", instr.rest)
+    contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    if not m or not contract:
+        return 0.0
+    lhs_shape = comp.shapes.get(m.group(1))
+    if lhs_shape is None:
+        return 0.0
+    lhs_dims = _shape_dims(lhs_shape)
+    if not lhs_dims:
+        return 0.0
+    k = 1
+    for idx in contract.group(1).split(","):
+        if idx:
+            k *= lhs_dims[0][1][int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 constant in the loop condition — the trip count for
+    jax.lax.scan-style 0..N loops."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        m = re.search(r"constant\((\d+)\)", ins.rest)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HloTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "HloTotals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k] * mult
+
+    @property
+    def weighted_coll_bytes(self) -> float:
+        return sum(v * (2 if k == "all-reduce" else 1)
+                   for k, v in self.coll_bytes.items())
+
+
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+
+
+def _fusion_hbm(instr: Instr, comp: Computation,
+                comps: Dict[str, Computation]) -> float:
+    """HBM traffic of one top-level fusion op, slice- and alias-aware.
+
+    Naive counting treats every operand/output as a full read/write; but
+    a fusion whose body merely `dynamic-slice`s a big while-carried
+    buffer reads only the slice, and a fusion rooted in a
+    `dynamic-update-slice` of a parameter writes only the updated window
+    (XLA emits it in place).  This is exactly the scan-over-layers
+    stacked-activation pattern, and without this correction the memory
+    roofline term is inflated by O(n_layers).
+    """
+    call = _CALL_RE.search(instr.rest)
+    body = comps.get(call.group(1)) if call else None
+    operands = re.findall(r"(%[\w.\-]+)", instr.rest)
+    if body is None:
+        total = _shape_bytes(instr.shape)
+        for opname in operands:
+            s = comp.shapes.get(opname)
+            if s:
+                total += _shape_bytes(s)
+        return total
+
+    # map body parameter index -> uses
+    param_of: Dict[str, int] = {}
+    uses: Dict[int, List[Instr]] = {}
+    for ins in body.instrs:
+        if ins.op == "parameter":
+            m = re.search(r"parameter\((\d+)\)", "parameter(" + ins.rest)
+            idx = int(m.group(1)) if m else len(param_of)
+            param_of[ins.name] = idx
+            uses[idx] = []
+    for ins in body.instrs:
+        if ins.op == "parameter":
+            continue
+        for ref in re.findall(r"(%[\w.\-]+)", ins.rest):
+            if ref in param_of:
+                uses[param_of[ref]].append(ins)
+
+    root = body.instrs[-1] if body.instrs else None
+    # unwrap a trailing convert/bitcast chain to find the true producer
+    true_root = root
+    while true_root is not None and true_root.op in ("convert", "bitcast",
+                                                     "copy"):
+        m = re.match(r"\s*(%[\w.\-]+)", true_root.rest)
+        prod = m.group(1) if m else None
+        nxt = next((i for i in body.instrs if i.name == prod), None)
+        if nxt is None:
+            break
+        true_root = nxt
+
+    by_name = {i.name: i for i in body.instrs}
+
+    def _trace_to_param(name: str) -> Optional[str]:
+        """Follow unary convert/bitcast/copy chains back to a parameter."""
+        for _ in range(8):
+            ins2 = by_name.get(name)
+            if ins2 is None:
+                return None
+            if ins2.op == "parameter":
+                return ins2.name
+            if ins2.op not in ("convert", "bitcast", "copy"):
+                return None
+            m = re.match(r"\s*(%[\w.\-]+)", ins2.rest)
+            if not m:
+                return None
+            name = m.group(1)
+        return None
+
+    dus_param = -1      # parameter aliased by an in-place root DUS
+    out_bytes = _shape_bytes(instr.shape)
+    if true_root is not None and true_root.op == "dynamic-update-slice":
+        ops = re.findall(r"(%[\w.\-]+)", true_root.rest)
+        src = _trace_to_param(ops[0]) if ops else None
+        if src is not None:
+            upd_shape = body.shapes.get(ops[1]) if len(ops) > 1 else None
+            upd = _shape_bytes(upd_shape) if upd_shape else 0
+            dus_param = param_of[src]
+            out_bytes = upd          # in-place: write the window only
+
+    total = float(out_bytes)
+    for pos, opname in enumerate(operands):
+        s = comp.shapes.get(opname)
+        if not s:
+            continue
+        full = _shape_bytes(s)
+        u = uses.get(pos, [])
+        if pos == dus_param:
+            # aliased buffer: no read of the untouched region
+            contrib = 0
+        elif u and all(i.op == "dynamic-slice" for i in u):
+            contrib = sum(_shape_bytes(i.shape) for i in u)
+        else:
+            contrib = full
+        total += contrib
+    return total
+
+
+def _analyze_comp(name: str, comps: Dict[str, Computation],
+                  memo: Dict[str, HloTotals],
+                  in_fusion: bool = False) -> HloTotals:
+    key = name + ("#f" if in_fusion else "")
+    if key in memo:
+        return memo[key]
+    memo[key] = HloTotals()        # break cycles defensively
+    comp = comps.get(name)
+    if comp is None:
+        return memo[key]
+    tot = HloTotals()
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            tot.flops += _dot_flops(ins, comp)
+        base = ins.op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not ins.op.endswith("-done"):
+            b = _shape_bytes(ins.shape)
+            # XLA:CPU promotes bf16 reductions to f32 ("..._promoted"
+            # to_apply computations); TPU runs them in bf16 — halve.
+            if "_promoted" in ins.rest:
+                b //= 2
+            tot.coll_bytes[base] += b
+        if not in_fusion and ins.op not in (
+                "parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "while", "call", "conditional"):
+            # materialized traffic: output + operand reads.
+            if ins.op == "dynamic-update-slice":
+                # in-place: only the update slice moves (operand 1)
+                ops = re.findall(r"(%[\w.\-]+)", ins.rest)
+                if len(ops) >= 2:
+                    s = comp.shapes.get(ops[1])
+                    if s:
+                        tot.hbm_bytes += 2 * _shape_bytes(s)
+            elif ins.op == "dynamic-slice":
+                tot.hbm_bytes += 2 * _shape_bytes(ins.shape)
+            elif ins.op == "fusion":
+                tot.hbm_bytes += _fusion_hbm(ins, comp, comps)
+            else:
+                tot.hbm_bytes += _shape_bytes(ins.shape)
+                for opname in re.findall(r"(%[\w.\-]+)", ins.rest):
+                    s = comp.shapes.get(opname)
+                    if s:
+                        tot.hbm_bytes += _shape_bytes(s)
+        if ins.op == "while":
+            body = _CALL_RE.search(ins.rest)
+            cond = _COND_RE.search(ins.rest)
+            trips = 1
+            if cond and cond.group(1) in comps:
+                trips = _trip_count(comps[cond.group(1)])
+            if body:
+                sub = _analyze_comp(body.group(1), comps, memo, in_fusion)
+                tot.add(sub, trips)
+        elif ins.op in ("fusion",):
+            call = _CALL_RE.search(ins.rest)
+            if call:
+                sub = _analyze_comp(call.group(1), comps, memo,
+                                    in_fusion=True)
+                tot.add(sub, 1.0)
+        elif ins.op in ("call", "conditional", "async-start"):
+            for call in _CALL_RE.findall(ins.rest):
+                sub = _analyze_comp(call, comps, memo, in_fusion)
+                tot.add(sub, 1.0)
+    memo[key] = tot
+    return tot
+
+
+def analyze_hlo(text: str) -> HloTotals:
+    comps = parse_computations(text)
+    entry = comps.get("__ENTRY__")
+    if entry is None:
+        # fall back: last computation
+        entry = list(comps.values())[-1]
+    return _analyze_comp(entry.name, comps, {})
+
+
+# ---------------------------------------------------------------------------
+# Per-op attribution — the "profile" for the §Perf hypothesis loop.
+# ---------------------------------------------------------------------------
+def _collect_contribs(name: str, comps: Dict[str, Computation],
+                      out: Dict[Tuple[str, str], List[float]],
+                      mult: float, in_fusion: bool,
+                      seen: Optional[set] = None) -> None:
+    comp = comps.get(name)
+    if comp is None:
+        return
+    seen = seen or set()
+    if name in seen:
+        return
+    for ins in comp.instrs:
+        flops = _dot_flops(ins, comp) if ins.op == "dot" else 0.0
+        hbm = 0.0
+        coll = 0.0
+        base = ins.op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not ins.op.endswith("-done"):
+            b = _shape_bytes(ins.shape)
+            if "_promoted" in ins.rest:
+                b //= 2
+            coll = b
+        if not in_fusion and ins.op not in (
+                "parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast", "while", "call", "conditional"):
+            if ins.op == "dynamic-update-slice":
+                ops = re.findall(r"(%[\w.\-]+)", ins.rest)
+                if len(ops) >= 2:
+                    s = comp.shapes.get(ops[1])
+                    if s:
+                        hbm = 2 * _shape_bytes(s)
+            elif ins.op == "dynamic-slice":
+                hbm = 2 * _shape_bytes(ins.shape)
+            elif ins.op == "fusion":
+                hbm = _fusion_hbm(ins, comp, comps)
+            else:
+                hbm = _shape_bytes(ins.shape)
+                for opname in re.findall(r"(%[\w.\-]+)", ins.rest):
+                    s = comp.shapes.get(opname)
+                    if s:
+                        hbm += _shape_bytes(s)
+        if flops or hbm or coll:
+            key = (ins.op, ins.shape if len(ins.shape) < 90
+                   else ins.shape[:87] + "...")
+            acc = out.setdefault(key, [0.0, 0.0, 0.0, 0.0])
+            acc[0] += flops * mult
+            acc[1] += hbm * mult
+            acc[2] += coll * mult
+            acc[3] += mult
+        if ins.op == "while":
+            body = _CALL_RE.search(ins.rest)
+            cond = _COND_RE.search(ins.rest)
+            trips = 1
+            if cond and cond.group(1) in comps:
+                trips = _trip_count(comps[cond.group(1)])
+            if body:
+                _collect_contribs(body.group(1), comps, out, mult * trips,
+                                  in_fusion, seen | {name})
+        elif ins.op == "fusion":
+            call = _CALL_RE.search(ins.rest)
+            if call:
+                _collect_contribs(call.group(1), comps, out, mult, True,
+                                  seen | {name})
+        elif ins.op in ("call", "conditional", "async-start"):
+            for call in _CALL_RE.findall(ins.rest):
+                _collect_contribs(call, comps, out, mult, in_fusion,
+                                  seen | {name})
+
+
+def top_contributors(text: str, k: int = 25, by: str = "hbm") -> List[dict]:
+    """Rank (op, shape) sites by hbm bytes / flops / collective bytes,
+    with while-loop trip multipliers applied. `by`: hbm|flops|coll."""
+    comps = parse_computations(text)
+    entry = comps.get("__ENTRY__")
+    if entry is None:
+        entry = list(comps.values())[-1]
+    out: Dict[Tuple[str, str], List[float]] = {}
+    _collect_contribs(entry.name, comps, out, 1.0, False)
+    idx = {"flops": 0, "hbm": 1, "coll": 2}[by]
+    rows = [{"op": op, "shape": shape, "flops": v[0], "hbm_bytes": v[1],
+             "coll_bytes": v[2], "count": v[3]}
+            for (op, shape), v in out.items()]
+    rows.sort(key=lambda r: -[r["flops"], r["hbm_bytes"],
+                              r["coll_bytes"]][idx])
+    return rows[:k]

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; smoke tests and
+benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         dp: int = 16, tp: int = 16):
+    """Single pod: (dp, tp) = 256 chips, axes (data, model); default
+    (16, 16). Multi-pod: (2, dp, tp) = 512 chips, (pod, data, model).
+    dp*tp must equal 256 (one v5e pod). Non-default splits (e.g. 8x32)
+    are §Perf variants — see EXPERIMENTS.md iteration L4."""
+    assert dp * tp == 256, (dp, tp)
+    shape = (2, dp, tp) if multi_pod else (dp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_demo_mesh(n_devices: int | None = None, model_axis: int = 1):
+    """CPU demo mesh over host devices: (n, model_axis)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         devices=devs[:n])

@@ -1,0 +1,70 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse     # noqa: E402
+
+from .dryrun import lower_pair                     # noqa: E402
+from .hlo_analysis import top_contributors         # noqa: E402
+from .roofline import analyze                      # noqa: E402
+
+"""Per-op roofline profile of one (arch x shape x mesh) dry-run — the
+'profiler' of the §Perf hypothesis loop (no real TPU, so the profile is
+the trip-count-weighted HLO op breakdown).
+
+  PYTHONPATH=src python -m repro.launch.profile_pair \
+      --arch llama3-405b --shape train_4k [--by hbm|flops|coll] [-k 30]
+"""
+
+
+def fmt(x: float) -> str:
+    for unit, div in (("P", 1e15), ("T", 1e12), ("G", 1e9), ("M", 1e6),
+                      ("K", 1e3)):
+        if abs(x) >= div:
+            return f"{x / div:8.2f}{unit}"
+    return f"{x:8.0f} "
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--by", default="hbm", choices=["hbm", "flops", "coll"])
+    ap.add_argument("-k", type=int, default=30)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--moe-dispatch", default=None)
+    ap.add_argument("--sp", action="store_true")
+    ap.add_argument("--grad-rs", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--tp", type=int, default=None)
+    args = ap.parse_args()
+
+    variant = {k: v for k, v in (("moe_dispatch", args.moe_dispatch),
+                                 ("sp", args.sp), ("grad_rs", args.grad_rs),
+                                 ("accum", args.accum),
+                                 ("tp", args.tp)) if v}
+    lowered, compiled, meta = lower_pair(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        fsdp=not args.no_fsdp, variant=variant)
+    text = compiled.as_text()
+    roof = analyze(compiled, meta["n_devices"], hlo_text=text)
+    print(f"== {args.arch} x {args.shape} [{meta['mesh']}] "
+          f"variant={variant} compile={meta['compile_s']:.1f}s")
+    mem = compiled.memory_analysis()
+    print(f"   args={getattr(mem, 'argument_size_in_bytes', 0)/1e9:.2f}GB "
+          f"temp={getattr(mem, 'temp_size_in_bytes', 0)/1e9:.2f}GB "
+          f"out={getattr(mem, 'output_size_in_bytes', 0)/1e9:.2f}GB")
+    d = roof.as_dict()
+    print("   roofline:", {k: (f"{v:.3e}" if isinstance(v, float) else v)
+                           for k, v in d.items() if not isinstance(v, dict)})
+    print(f"\n top {args.k} contributors by {args.by} "
+          f"(per device, trip-weighted):")
+    print(f" {'flops':>9s} {'hbm':>9s} {'coll':>9s} {'x':>6s}  op  shape")
+    for r in top_contributors(text, k=args.k, by=args.by):
+        print(f" {fmt(r['flops'])} {fmt(r['hbm_bytes'])} "
+              f"{fmt(r['coll_bytes'])} {r['count']:6.0f}  "
+              f"{r['op']}  {r['shape']}")
+
+
+if __name__ == "__main__":
+    main()

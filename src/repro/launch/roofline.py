@@ -1,0 +1,192 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+  compute    = HLO_FLOPs / (chips * 197e12 FLOP/s)
+  memory     = HLO_bytes / (chips * 819e9 B/s)
+  collective = collective_bytes / (chips * links * 50e9 B/s)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (already
+per-partition under SPMD). collective_bytes is parsed out of the
+compiled HLO text: we sum the (per-device) output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting all-reduce x2 (reduce-scatter +
+all-gather phases of a ring all-reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+ICI_LINKS = 2              # usable links per axis-neighbour pair (2D torus)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.  bf16[16,2048,128]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device collective traffic by op kind, from (SPMD) HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)",
+                     line)
+        if not m:
+            continue
+        op = m.group(2)
+        # strip fusion suffixes e.g. all-reduce-start
+        base = op.replace("-start", "").replace("-done", "")
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting async pairs
+        out[base] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    hbm_bytes: float              # per device
+    coll_bytes: float             # per device (weighted)
+    coll_by_kind: Dict[str, int]
+    n_devices: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "collective_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_lower_bound_s": self.step_time_lower_bound,
+        }
+
+
+def analyze(compiled, n_devices: int,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Build the roofline from a compiled executable.
+
+    Uses the trip-count-aware HLO walker (hlo_analysis.py): XLA's own
+    cost_analysis() counts while-loop bodies ONCE, under-reporting
+    scanned models by ~n_layers x accum; the walker multiplies loop
+    bodies by their recovered trip counts. Raw cost_analysis numbers are
+    preserved separately by the caller for cross-checking.
+    """
+    from .hlo_analysis import analyze_hlo
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    tot = analyze_hlo(text)
+    return Roofline(flops=tot.flops, hbm_bytes=tot.hbm_bytes,
+                    coll_bytes=tot.weighted_coll_bytes,
+                    coll_by_kind={k: int(v)
+                                  for k, v in tot.coll_bytes.items()},
+                    n_devices=n_devices)
+
+
+def analyze_raw(compiled, n_devices: int,
+                hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline from XLA cost_analysis() + flat HLO grep (no loop
+    multipliers) — kept for comparison with `analyze`."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    weighted = sum(v * (2 if k == "all-reduce" else 1)
+                   for k, v in coll.items())
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=float(weighted),
+                    coll_by_kind=coll, n_devices=n_devices)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for a train
+    step; 2*N*D for prefill; 2*N_active per token for decode."""
+    h, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd = cfg.resolved_head_dim
+    attn_params = h * (cfg.n_heads * hd + 2 * cfg.kv_heads * hd) \
+        + cfg.n_heads * hd * h
+    if cfg.family == "moe":
+        ffn_active = 3 * h * cfg.moe.expert_ff * cfg.moe.top_k
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * h
+        attn_params = 0
+        ffn_active = d_in * (2 * d_in + 2 * s.d_state) + d_in * h
+    elif cfg.family == "hybrid":
+        W = cfg.hybrid.lru_width or h
+        # 2/3 rec layers + 1/3 attn; every layer has an MLP
+        rec = 3 * h * W + 2 * (W // 8) * W
+        ffn_active = 3 * h * cfg.d_ff + (2 * rec + attn_params) / 3.0
+        attn_params = 0
+    else:
+        mult = 3 if cfg.activation == "swiglu" else 2
+        ffn_active = mult * h * cfg.d_ff
+    n_active = L * (attn_params + ffn_active) + 2 * V * h
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    per_tok = {"train": 6, "prefill": 2, "decode": 2}[shape.kind]
+    total = per_tok * n_active * tokens
+    if (cfg.family == "audio" and cfg.encdec is not None
+            and shape.kind != "decode"):
+        # encoder runs over n_audio_frames once per sequence, plus one
+        # cross-attention block per decoder layer over those frames
+        # (decode steps reuse the cached encoder output — no new FLOPs).
+        enc_params = cfg.encdec.n_enc_layers * (attn_params + ffn_active)
+        xattn = L * attn_params
+        enc_tokens = shape.global_batch * cfg.encdec.n_audio_frames
+        total += per_tok * (enc_params + xattn) * enc_tokens
+    return total

@@ -1,0 +1,94 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+against these. Modality frontends are stubs: `patch_embeds` /  `frames`
+are the precomputed embeddings the real ViT/conv frontend would emit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from ..models.model import init_cache, init_params
+from ..training.optimizer import AdamW
+from ..training.train_step import TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def dryrun_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Production-run overrides: bf16 params, scanned+remat layers,
+    chunked (flash-style) attention; full-attention archs get the
+    sliding-window variant for the 500k decode shape."""
+    kw = dict(param_dtype="bfloat16", attn_impl="chunked",
+              scan_layers=True, remat=True)
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and cfg.sliding_window is None):
+        kw["sliding_window"] = 8192
+    return cfg.with_(**kw)
+
+
+def accum_for(cfg: ModelConfig, shape: InputShape,
+              data_ways: int = 16) -> int:
+    """Gradient-accumulation depth for train shapes: keep the per-device
+    micro-batch near ~1 sequence for giant models, a few for mid-size."""
+    if shape.kind != "train":
+        return 1
+    per_dev_seqs = max(1, shape.global_batch // data_ways)
+    act_cost = cfg.n_layers * cfg.d_model          # rough residual bytes/tok
+    if act_cost >= 126 * 16384:                    # 405B class
+        return per_dev_seqs
+    if act_cost >= 28 * 4096:                      # ~6-12B class
+        return min(4, per_dev_seqs)
+    return min(2, per_dev_seqs)
+
+
+def optimizer_for(cfg: ModelConfig) -> AdamW:
+    """bf16 optimizer states for the 405B config (HBM fit — DESIGN.md)."""
+    big = cfg.arch_id == "llama3-405b"
+    return AdamW(lr=3e-4, state_dtype="bfloat16" if big else "float32")
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for one step of `shape.kind`."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            P = max(1, int(S * cfg.vlm.patches_per_seq_frac))
+            specs["patch_embeds"] = SDS((B, P, cfg.vlm.vision_dim),
+                                        jnp.bfloat16)
+            specs["patch_pos"] = SDS((B, P), jnp.int32)
+        if cfg.family == "audio":
+            specs["frames"] = SDS((B, cfg.encdec.n_audio_frames,
+                                   cfg.d_model), jnp.bfloat16)
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs
+    # decode: ONE new token per stream + cache of seq_len capacity
+    return {"tokens": SDS((B,), jnp.int32)}
+
+
+def abstract_state(cfg: ModelConfig, opt: AdamW) -> TrainState:
+    """eval_shape'd TrainState — no device allocation."""
+    def build(key):
+        params = init_params(key, cfg)
+        return TrainState(params=params, opt=opt.init(params))
+    return jax.eval_shape(build, jax.random.PRNGKey(0))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           jnp.bfloat16))

@@ -1,0 +1,129 @@
+"""Shared neural building blocks (pure functional JAX).
+
+Parameters are plain nested dicts of jnp arrays; every block exposes
+`init_*(key, ...) -> params` and a pure apply function. Weight layouts
+are chosen so the `model` mesh axis can shard the obvious contracting
+dimensions (heads / ffn / experts) — see parallel/sharding.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(orig)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return out.astype(orig)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, d_model, d_ff, dtype),
+         "down": dense_init(k2, d_ff, d_model, dtype)}
+    if activation == "swiglu":
+        p["gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, activation: str) -> jax.Array:
+    up = x @ params["up"]
+    if activation == "swiglu":
+        gate = jax.nn.silu(x @ params["gate"])
+        h = gate * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["down"]
+
+
+# --------------------------------------------------------------------------
+# Embedding / head
+# --------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array,
+            tied: bool) -> jax.Array:
+    if tied:
+        return x @ table_or_head.T
+    return x @ table_or_head
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float,
+                     rotary_frac: float = 1.0) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot = int(head_dim * rotary_frac) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_frac: float = 1.0) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S].
+
+    rotary_frac < 1 rotates only the leading fraction of each head
+    (ChatGLM-style 2D/partial rotary); the remainder passes through.
+    """
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta, rotary_frac)
+    rot = inv.shape[0] * 2
+    if rot == 0:                # rotary disabled (absolute-pos models)
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, rot/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., :, None, :]    # broadcast over heads
+    cos = cos[..., :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(*xr.shape)
+    out = jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+    return out

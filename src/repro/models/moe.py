@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bounded dispatch.
+
+Expert weights are stacked [E, d_model, d_ff] so the `model` mesh axis
+shards the EXPERT dimension (expert parallelism) — XLA then inserts the
+all-to-all-equivalent collectives for the dispatch/combine einsums.
+Dispatch uses the standard capacity-factor one-hot formulation (tokens
+over capacity are dropped, residual passthrough keeps them alive), plus
+the switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_moe(key, d_model: int, n_experts: int, expert_ff: int,
+             dtype) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d_model, n_experts, jnp.float32),
+        "gate": (jax.random.normal(kg, (n_experts, d_model, expert_ff),
+                                   jnp.float32) / jnp.sqrt(d_model)
+                 ).astype(dtype),
+        "up": (jax.random.normal(ku, (n_experts, d_model, expert_ff),
+                                 jnp.float32) / jnp.sqrt(d_model)
+               ).astype(dtype),
+        "down": (jax.random.normal(kd, (n_experts, expert_ff, d_model),
+                                   jnp.float32) / jnp.sqrt(expert_ff)
+                 ).astype(dtype),
+    }
+
+
+def moe_ffn(params: dict, x: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25,
+            dispatch: str = "sort",
+            dispatch_group: int = 0,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (out [B,S,D], aux_loss scalar).
+
+    `dispatch`:
+      "sort"   — argsort-based gather/scatter dispatch, O(T·k·D) data
+                 movement and zero dispatch FLOPs (the TPU-native path;
+                 see EXPERIMENTS.md §Perf iteration G1).
+      "einsum" — classic Mesh-TF one-hot formulation: builds a
+                 [T,E,cap] dispatch tensor, whose einsums cost
+                 O(T·E·cap·D) = O(T²·D·k·cf/1) FLOPs — quadratic in
+                 tokens. Kept as the reference/baseline.
+    Both paths implement identical capacity semantics (first-come
+    queueing in token order, dropped tokens ride the residual).
+    """
+    B, S, D = x.shape
+    E = params["router"].shape[1]
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])      # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)               # [T,k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)                                         # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (T * top_k))
+    aux = E * jnp.sum(me * ce)
+
+    cap = int(capacity_factor * T * top_k / E) or 1
+
+    if dispatch == "sort":
+        # Dispatch in groups of <= dispatch_group tokens. Group
+        # boundaries align with the batch/sequence sharding (B·S
+        # flatten), so each group's argsort/scatter stays shard-local —
+        # the global variant all-gathers the whole [E·cap, D] expert
+        # buffer across the data axis (§Perf iteration G2). Capacity is
+        # per-group (cap_g = cf·Tg·k/E), the same semantics at
+        # dispatch_group >= T as the global einsum reference.
+        Tg = dispatch_group or T
+        while T % Tg:                     # largest divisor <= requested
+            Tg -= 1
+        G = T // Tg
+        cap_g = int(capacity_factor * Tg * top_k / E) or 1
+        out = jax.vmap(
+            lambda xg, ig, gg: _moe_sort_dispatch(params, xg, ig, gg,
+                                                  cap_g)
+        )(xt.reshape(G, Tg, D), idx.reshape(G, Tg, top_k),
+          gate_vals.reshape(G, Tg, top_k))
+        return out.reshape(B, S, D), aux
+
+    # ---------------- reference einsum path ----------------
+    # position of each (token, slot) within its expert's queue
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)           # [T,k,E]
+    flat = onehot.reshape(T * top_k, E)
+    pos = jnp.cumsum(flat, axis=0) - 1                         # queue index
+    pos = (pos * flat).sum(-1).reshape(T, top_k)               # [T,k]
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # dispatch [T,k,E,cap] one-hot (bool) -> expert inputs [E,cap,D]
+    disp = (jax.nn.one_hot(idx, E, dtype=xt.dtype)[..., :, None]
+            * jax.nn.one_hot(pos, cap, dtype=xt.dtype)[..., None, :]
+            * keep[..., None, None])                           # [T,k,E,cap]
+    disp = disp.sum(1)                                         # [T,E,cap]
+    ex_in = jnp.einsum("td,tec->ecd", xt, disp)                # [E,cap,D]
+
+    ex_out = _expert_mlps(params, ex_in)                       # [E,cap,D]
+
+    comb = jnp.einsum("tec,ecd->ted", disp, ex_out)            # [T,E,D]
+    # weighted combine: sum_k gate * expert_out(token)
+    gate_e = (jax.nn.one_hot(idx, E, dtype=xt.dtype)
+              * gate_vals[..., None].astype(xt.dtype)).sum(1)  # [T,E]
+    out = jnp.einsum("te,ted->td", gate_e, comb)
+    return out.reshape(B, S, D), aux
+
+
+def _expert_mlps(params: dict, ex_in: jax.Array) -> jax.Array:
+    """[E,cap,D] -> [E,cap,D] through each expert's SwiGLU MLP."""
+    h = jnp.einsum("ecd,edf->ecf", ex_in, params["gate"])
+    u = jnp.einsum("ecd,edf->ecf", ex_in, params["up"])
+    h = jax.nn.silu(h) * u
+    return jnp.einsum("ecf,efd->ecd", h, params["down"])       # [E,cap,D]
+
+
+def _moe_sort_dispatch(params: dict, xt: jax.Array, idx: jax.Array,
+                       gate_vals: jax.Array, cap: int) -> jax.Array:
+    """Sort-based dispatch: gather tokens into [E,cap,D] expert buffers
+    via a stable argsort over expert ids — no [T,E,cap] tensor, no
+    dispatch matmuls. Identical capacity semantics to the one-hot path
+    (queue position = arrival order of (token, slot) pairs)."""
+    T, D = xt.shape
+    E = params["router"].shape[1]
+    k = idx.shape[1]
+    S = T * k                                                  # slots
+
+    slot_expert = idx.reshape(S)                               # [S]
+    order = jnp.argsort(slot_expert, stable=True)              # [S]
+    # rank of each slot in the sorted order, then queue position
+    # within its expert = rank - (# slots of smaller expert ids)
+    rank = jnp.zeros((S,), jnp.int32).at[order].set(
+        jnp.arange(S, dtype=jnp.int32))
+    counts = jnp.bincount(slot_expert, length=E)               # [E]
+    starts = jnp.cumsum(counts) - counts                       # [E]
+    pos = rank - starts[slot_expert]                           # [S]
+    keep = pos < cap
+    gate_kept = (gate_vals.reshape(S) * keep).astype(xt.dtype)
+
+    # scatter tokens into expert buffers (unique (e,pos) per kept slot)
+    buf_idx = jnp.where(keep, slot_expert * cap + pos, E * cap)  # drop row
+    token_of_slot = jnp.arange(S, dtype=jnp.int32) // k
+    ex_in = jnp.zeros((E * cap + 1, D), xt.dtype).at[buf_idx].set(
+        xt[token_of_slot], mode="drop")
+    ex_out = _expert_mlps(params, ex_in[:E * cap].reshape(E, cap, D))
+
+    # gather back: each kept slot reads its expert-buffer row
+    slot_out = ex_out.reshape(E * cap, D)[
+        jnp.clip(buf_idx, 0, E * cap - 1)]                     # [S,D]
+    slot_out = slot_out * gate_kept[:, None]
+    out = jnp.zeros((T, D), xt.dtype).at[token_of_slot].add(slot_out)
+    return out

@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence:  a_t = a^(c * r_t),  a = sigmoid(Lambda),  c = 8
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear first-order recurrences are associative, so the training/prefill
+path uses `jax.lax.associative_scan` (log-depth — the TPU-native
+replacement for the paper-cited CUDA linear-scan kernels), and decode is
+the O(1) step. The full Griffin recurrent block wraps the RG-LRU with a
+GeLU gate branch and a short causal conv, then projects back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+_C = 8.0
+
+
+def init_rglru_block(key, d_model: int, lru_width: int, conv_width: int,
+                     dtype, n_blocks: int = 8) -> dict:
+    """Gates use BLOCK-DIAGONAL weights (as in the RecurrentGemma
+    reference implementation) — [nb, W/nb, W/nb]; the block axis is also
+    the natural tensor-parallel shard axis."""
+    while lru_width % n_blocks:
+        n_blocks -= 1
+    wb = lru_width // n_blocks
+    ks = jax.random.split(key, 6)
+    lam = jax.random.uniform(ks[4], (lru_width,), jnp.float32, 2.0, 5.0)
+    blk = (jax.random.normal(ks[3], (2, n_blocks, wb, wb), jnp.float32)
+           / jnp.sqrt(wb)).astype(dtype)
+    return {
+        "in_gate": dense_init(ks[0], d_model, lru_width, dtype),
+        "in_rec": dense_init(ks[1], d_model, lru_width, dtype),
+        "conv": (jax.random.normal(ks[2], (conv_width, lru_width),
+                                   jnp.float32) * 0.1).astype(dtype),
+        "w_a": blk[0],
+        "w_x": blk[1],
+        "b_a": jnp.zeros((lru_width,), jnp.float32),
+        "b_x": jnp.zeros((lru_width,), jnp.float32),
+        "lambda": lam,                       # a = sigmoid(lambda) in (0,1)
+        "out": dense_init(jax.random.fold_in(key, 7), lru_width, d_model,
+                          dtype),
+    }
+
+
+def _causal_conv(x, w):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+
+
+def _blockdiag(u, w):
+    """u: [..., W], w: [nb, Wb, Wb] block-diagonal matmul."""
+    nb, wb, _ = w.shape
+    ub = u.reshape(*u.shape[:-1], nb, wb)
+    out = jnp.einsum("...nw,nwv->...nv", ub, w)
+    return out.reshape(*u.shape)
+
+
+def _gates(params, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(_blockdiag(uf, params["w_a"].astype(jnp.float32))
+                       + params["b_a"])
+    i = jax.nn.sigmoid(_blockdiag(uf, params["w_x"].astype(jnp.float32))
+                       + params["b_x"])
+    log_a_base = jax.nn.log_sigmoid(params["lambda"])   # log a, a in (0,1)
+    log_a = _C * r * log_a_base                         # a_t = a^(c r_t)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * u.astype(jnp.float32))
+
+
+def rglru_scan(params: dict, u: jax.Array,
+               h0: jax.Array | None = None) -> jax.Array:
+    """u: [B,S,W] -> h: [B,S,W] via parallel associative scan."""
+    a, b = _gates(params, u)
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(params: dict, x: jax.Array,
+                h0: jax.Array | None = None, *, return_state: bool = False):
+    """Griffin recurrent block: [B,S,D] -> [B,S,D]."""
+    gate = jax.nn.gelu((x @ params["in_gate"]).astype(jnp.float32))
+    u = x @ params["in_rec"]
+    u = _causal_conv(u, params["conv"])
+    h = rglru_scan(params, u, h0)
+    y = (h * gate).astype(x.dtype) @ params["out"]
+    if return_state:
+        return y, h[:, -1]
+    return y
+
+
+def rglru_init_state(batch: int, lru_width: int, conv_width: int,
+                     dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, lru_width), jnp.float32),
+        "conv_buf": jnp.zeros((batch, conv_width - 1, lru_width), dtype),
+    }
+
+
+def rglru_decode_step(params: dict, x1: jax.Array, state: dict):
+    """x1: [B,D] -> (y [B,D], new state). O(1)."""
+    gate = jax.nn.gelu((x1 @ params["in_gate"]).astype(jnp.float32))
+    u = x1 @ params["in_rec"]
+    buf = jnp.concatenate([state["conv_buf"], u[:, None]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", buf, params["conv"])
+    a, b = _gates(params, u[:, None])
+    a, b = a[:, 0], b[:, 0]
+    h = a * state["h"] + b
+    y = (h * gate).astype(x1.dtype) @ params["out"]
+    return y, {"h": h, "conv_buf": buf[:, 1:]}

@@ -1,0 +1,202 @@
+"""Mamba-2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+Chunked SSD algorithm: within a chunk the recurrence is evaluated in its
+"dual" quadratic attention-like form (matmuls — MXU friendly); states are
+passed between chunks with an exact sequential scan over chunk summaries.
+This is the TPU-native adaptation: chunk size is picked so the intra-chunk
+matrices live in VMEM and hit the 128-lane MXU, while the O(S/chunk) scan
+carries only the [H, P, N] state.
+
+Scalar-identity A (Mamba-2's choice): a_t = exp(dt_t * A) per head.
+
+Decode: h <- a * h + dt * B x ; y = C h + D x  (O(1) per token).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_ssm(key, d_model: int, *, d_state: int, head_dim: int,
+             expand: int, conv_width: int, dtype) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        # fused input projection -> [z (gate), x, B, C, dt]
+        "in_proj": dense_init(
+            ks[0], d_model,
+            2 * d_inner + 2 * d_state + n_heads, dtype),
+        "conv": (jax.random.normal(ks[1],
+                                   (conv_width, d_inner + 2 * d_state),
+                                   jnp.float32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _split_proj(p, d_inner, d_state, n_heads):
+    z, xbcdt = jnp.split(p, [d_inner], axis=-1)
+    x, B, C, dt = jnp.split(
+        xbcdt, [d_inner, d_inner + d_state, d_inner + 2 * d_state], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x [B,S,C], w [W,C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    return out
+
+
+def ssm_forward(params: dict, xin: jax.Array, *, d_state: int,
+                head_dim: int, expand: int, chunk: int,
+                dt_min: float = 1e-3, impl: str = "jnp") -> jax.Array:
+    """xin: [B,S,D] -> [B,S,D] (training/prefill path, chunked SSD).
+
+    `impl="pallas"` routes the intra-chunk dual form through the
+    kernels/ssd_chunk.py Pallas kernel (VMEM-resident [c,c] decay
+    matrices); "jnp" is the portable per-head path below."""
+    Bsz, S, Dm = xin.shape
+    d_inner = expand * Dm
+    H = d_inner // head_dim
+    P, N = head_dim, d_state
+
+    proj = xin @ params["in_proj"]
+    z, x, Bm, Cm, dt = _split_proj(proj, d_inner, d_state, H)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv"]))
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"]) + dt_min        # [B,S,H]
+    A = -jnp.exp(params["A_log"])                             # [H] (<0)
+
+    # pad to chunk multiple
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    xh = x.reshape(Bsz, nc, chunk, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, chunk, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+
+    if impl == "pallas":
+        from ..kernels.ops import ssd_chunk_scan
+        A = -jnp.exp(params["A_log"])
+        G = Bsz * H
+        rep = lambda t: jnp.broadcast_to(                    # noqa: E731
+            t[:, None], (Bsz, H) + t.shape[1:]).reshape((G,) + t.shape[1:])
+        xg = xh.transpose(0, 3, 1, 2, 4).reshape(G, nc, chunk, P)
+        dtg = dtc.transpose(0, 3, 1, 2).reshape(G, nc, chunk)
+        dag = dtg * jnp.tile(A, Bsz)[:, None, None]
+        y = ssd_chunk_scan(rep(Cc), rep(Bc), xg, dag, dtg)   # [G,nc,c,P]
+        y = y + xg * jnp.tile(params["D"], Bsz)[:, None, None, None]
+        y = y.reshape(Bsz, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]
+        return _ssm_output(params, y, z, Bsz, S, d_inner, xin.dtype)
+
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # [B,nc,c,c]
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def per_head(args):
+        """SSD for ONE head — keeps the [c,c] decay matrices per-head so
+        the peak live tensor is [B,nc,c,c], not [B,nc,c,c,H] (which at
+        production shapes is hundreds of GB)."""
+        xh_h, dtc_h, A_h, D_h = args   # [B,nc,c,P], [B,nc,c], [], []
+        da = dtc_h * A_h
+        cum = jnp.cumsum(da, axis=2)                          # [B,nc,c]
+        seg_end = cum[:, :, -1]                               # [B,nc]
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) * (i >= j)
+        diff = cum[:, :, :, None] - cum[:, :, None, :]        # [B,nc,c,c]
+        L = jnp.where(tril[None, None], jnp.exp(diff), 0.0)
+        scores = cb * L * dtc_h[:, :, None, :]                # [B,nc,c,c]
+        y_intra = jnp.einsum("bcij,bcjp->bcip", scores, xh_h)
+        # chunk summaries -> inter-chunk recurrence
+        decay_to_end = jnp.exp(seg_end[:, :, None] - cum)     # [B,nc,c]
+        states = jnp.einsum("bcj,bcjn,bcjp->bcnp",
+                            decay_to_end * dtc_h, Bc, xh_h)   # [B,nc,N,P]
+
+        def scan_fn(h, inp):
+            st, dec = inp
+            return h * jnp.exp(dec)[:, None, None] + st, h    # emit PREV
+        _, h_prev = jax.lax.scan(
+            scan_fn, jnp.zeros((Bsz, N, P), jnp.float32),
+            (states.transpose(1, 0, 2, 3), seg_end.transpose(1, 0)))
+        h_prev = h_prev.transpose(1, 0, 2, 3)                 # [B,nc,N,P]
+        y_inter = jnp.einsum("bcin,bcnp->bcip", Cc, h_prev) \
+            * jnp.exp(cum)[..., None]
+        return y_intra + y_inter + xh_h * D_h
+
+    y = jax.lax.map(per_head,
+                    (xh.transpose(3, 0, 1, 2, 4), dtc.transpose(3, 0, 1, 2),
+                     A, params["D"]))                          # [H,B,nc,c,P]
+    y = y.transpose(1, 2, 3, 0, 4).reshape(Bsz, Sp, H, P)[:, :S]
+    return _ssm_output(params, y, z, Bsz, S, d_inner, xin.dtype)
+
+
+def _ssm_output(params, y, z, Bsz, S, d_inner, out_dtype):
+    """Gated RMSNorm (Mamba-2) + output projection."""
+    y = y.reshape(Bsz, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"].astype(
+        jnp.float32)
+    return (y.astype(out_dtype)) @ params["out_proj"]
+
+
+def ssm_init_state(batch: int, d_model: int, *, d_state: int,
+                   head_dim: int, expand: int, conv_width: int,
+                   dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    return {
+        "h": jnp.zeros((batch, H, d_state, head_dim), jnp.float32),
+        "conv_buf": jnp.zeros((batch, conv_width - 1,
+                               d_inner + 2 * d_state), dtype),
+    }
+
+
+def ssm_decode_step(params: dict, x1: jax.Array, state: dict, *,
+                    d_state: int, head_dim: int, expand: int,
+                    dt_min: float = 1e-3):
+    """x1: [B,D] one token. Returns (y [B,D], new_state). O(1) per token."""
+    Bsz, Dm = x1.shape
+    d_inner = expand * Dm
+    H = d_inner // head_dim
+    proj = x1 @ params["in_proj"]
+    z, x, Bm, Cm, dt = _split_proj(proj, d_inner, d_state, H)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)                # [B,C]
+    buf = jnp.concatenate([state["conv_buf"], xbc[:, None]], axis=1)
+    w = params["conv"]
+    conv_out = jnp.einsum("bwc,wc->bc", buf, w)
+    xbc = jax.nn.silu(conv_out)
+    new_buf = buf[:, 1:]
+    x, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"]) + dt_min
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                        # [B,H]
+    xh = x.reshape(Bsz, H, head_dim).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm.astype(jnp.float32), xh)
+    h = state["h"] * a[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * params["D"][None, :, None]
+    y = y.reshape(Bsz, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"].astype(
+        jnp.float32)
+    out = y.astype(x1.dtype) @ params["out_proj"]
+    return out, {"h": h, "conv_buf": new_buf}

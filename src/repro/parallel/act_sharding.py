@@ -1,0 +1,91 @@
+"""Activation sharding constraints (GSPMD propagation pinning).
+
+Without hints, GSPMD occasionally resolves ambiguous einsum shardings by
+replicating the batch dimension (observed: the SSD per-head map pulled a
+global-batch all-gather into every layer). The fix is the MaxText-style
+pattern: `with_sharding_constraint` at block boundaries.
+
+The model code stays mesh-agnostic: it calls `constrain(x, kind)`, which
+is a no-op unless a launcher installed a constrainer via
+`activation_constraints(mesh, daxes)`.
+
+Kinds: "hidden" [B,S,D] — batch over data axes, rest replicated;
+       "ffn"    [B,S,F] — additionally F over model (tensor parallel);
+       "logits" [B,S,V] — V over model.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CONSTRAINER: Optional[Callable] = None
+
+
+def constrain(x, kind: str = "hidden"):
+    if _CONSTRAINER is None:
+        return x
+    return _CONSTRAINER(x, kind)
+
+
+@contextlib.contextmanager
+def activation_constraints(mesh, daxes: Tuple[str, ...],
+                           model_axis: str = "model",
+                           batch_sharded: bool = True,
+                           sp: bool = False):
+    """Install block-boundary constraints for the given mesh.
+
+    `sp=True` enables Megatron-SP-style SEQUENCE sharding of the
+    residual stream over the model axis: GSPMD then lowers each TP
+    partial-sum boundary as reduce-scatter(+all-gather before the next
+    sharded matmul) instead of a full [B,S,D] all-reduce, and the saved
+    per-layer activations shrink by the TP width. This is a beyond-paper
+    optimization recorded in EXPERIMENTS.md §Perf.
+    """
+    global _CONSTRAINER
+    b = daxes if batch_sharded else None
+    seq_ax = model_axis if sp else None
+
+    def fn(x, kind):
+        if x.ndim < 2:
+            return x
+        lead = (None,) * (x.ndim - 3) if x.ndim > 3 else ()
+        if kind == "hidden":
+            spec = (P(*lead, b, seq_ax, None) if x.ndim >= 3
+                    else P(b, None))
+        elif kind in ("ffn", "logits"):
+            spec = (P(*lead, b, None, model_axis) if x.ndim >= 3
+                    else P(b, model_axis))
+        elif kind == "prehead":
+            # Re-gather the sequence axis BEFORE the unembed matmul.
+            # Under SP the residual is S-sharded over `model` while the
+            # logits are V-sharded over `model`; if the S→V re-shard
+            # happens after the matmul, GSPMD resolves the backward
+            # same-axis conflict by all-gathering the [B,S,V] dlogits
+            # (34 GB/device on pixtral) instead of the [B,S,D] hidden
+            # (1.3 GB) — §Perf iteration P4.
+            spec = (P(*lead, b, None, None) if x.ndim >= 3
+                    else P(b, None))
+        else:
+            return x
+        # skip if dims don't divide
+        sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+        for dim, ax in zip(x.shape[x.ndim - len(tuple(spec)):],
+                           tuple(spec)):
+            axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            if dim % n:
+                return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    prev = _CONSTRAINER
+    _CONSTRAINER = fn
+    try:
+        yield
+    finally:
+        _CONSTRAINER = prev

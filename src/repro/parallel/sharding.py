@@ -1,0 +1,208 @@
+"""Per-architecture PartitionSpec rules for the (pod, data, model) mesh.
+
+Conventions (MaxText-style):
+  * `model` axis = tensor parallelism (the paper's static TP, §4.1) —
+    shards attention heads, FFN hidden, MoE experts, vocab.
+  * `data` axis = data parallelism; with `fsdp=True` parameters are also
+    sharded over `data` on a non-model dimension (ZeRO-3, matching the
+    paper's memory model M_ms = const per rank).
+  * `pod` axis (multi-pod mesh) joins `data` for batch / FSDP sharding —
+    cross-pod traffic is then gradient all-reduce + parameter all-gather,
+    the DCI-friendly pattern.
+
+PartitionSpecs are assigned by parameter-tree path; stacked layer params
+get a leading None for the scan [L] axis automatically.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+
+DP = "data"
+TP = "model"
+POD = "pod"
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in (POD, DP) if a in mesh.axis_names)
+
+
+def _rule(path: Tuple[str, ...], fsdp_axis) -> P:
+    """Map a parameter path (joined names) to a spec, layer-axis excluded.
+
+    FSDP placement rule: the `data` axes shard only NON-CONTRACTING
+    dimensions. Sharding a weight's contracting dim over `data` makes
+    GSPMD emit a full [B,S,D] activation all-reduce over the data axis
+    per matmul (observed: 268 MB fp32 per layer on chatglm3); sharding
+    the output dim instead yields the ZeRO-3 pattern — a small weight
+    all-gather that XLA hoists/overlaps. See EXPERIMENTS.md §Perf-1.
+    """
+    last = path[-1]
+    d = fsdp_axis  # None or tuple of data axes
+    dt = tuple(d) if isinstance(d, (tuple, list)) else (
+        (d,) if d else ())
+    tp_d = (TP,) + dt or None   # output dim sharded by TP then fsdp
+
+    # --- attention ---
+    if last in ("wq", "wk", "wv"):      # [D_in, D_out] contract D_in
+        return P(None, tp_d)
+    if last == "wo":                    # [H*hd, D] contract H*hd
+        return P(TP, d)
+    # --- mlp ---
+    if last in ("up", "gate") and "moe" not in path:
+        return P(None, tp_d)            # [D, F] contract D
+    if last == "down" and "moe" not in path:
+        return P(TP, d)                 # [F, D] contract F
+    # --- moe (experts stacked [E, ...]) -> expert parallelism over TP ---
+    if "moe" in path:
+        if last == "router":
+            return P(None, None)
+        if last in ("gate", "up"):      # [E, D, F] contract D
+            return P(TP, None, dt or None)
+        if last == "down":              # [E, F, D] contract F
+            return P(TP, None, dt or None)
+    # --- ssm ---
+    if "ssm" in path:
+        if last == "in_proj":           # [D, X] contract D
+            return P(None, tp_d)
+        if last == "out_proj":          # [W, D] contract W
+            return P(TP, d)
+        if last == "conv":              # [W, C] elementwise on C
+            return P(None, TP)
+        return P(*([None] * 1))
+    # --- rglru ---
+    if "rec" in path:
+        if last in ("in_gate", "in_rec"):
+            return P(None, dt or None)  # [D, W] contract D
+        if last == "out":
+            return P(None, d)           # [W, D] contract W (replicated)
+        if last in ("w_a", "w_x"):      # [nb, Wb, Wb] block-diagonal
+            return P(None, None, None)
+        if last == "conv":
+            return P(None, None)
+        return P(None)
+    # --- embeddings / head / connector ---
+    if last == "embed":                 # [V, D] gather rows
+        return P(tp_d, None)
+    if last == "head":                  # [D, V] contract D
+        return P(None, tp_d)
+    if last == "connector":
+        return P(None, TP)
+    # --- norms & 1-D leaves ---
+    return None  # resolved per-leaf rank below
+
+
+def param_specs(params: Any, cfg: ModelConfig, *, fsdp: bool = True,
+                mesh=None) -> Any:
+    """Pytree of PartitionSpec matching `params`."""
+    daxes = data_axes(mesh) if mesh is not None else (DP,)
+    fsdp_axis = daxes if fsdp else None
+    stacked_roots = ("layers", "units", "enc_layers", "dec_layers")
+
+    def spec_for(path, leaf):
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path)
+        stacked = names[0] in stacked_roots
+        core = _rule(names, fsdp_axis)
+        rank = leaf.ndim
+        if core is None:
+            core = P(*([None] * (rank - (1 if stacked else 0))))
+        core_t = tuple(core)
+        # pad/truncate to leaf rank (leaving the [L] axis unsharded)
+        want = rank - (1 if stacked else 0)
+        core_t = tuple(core_t[:want]) + (None,) * max(0, want - len(core_t))
+        full = ((None,) if stacked else ()) + core_t
+        # progressively drop trailing axes that do not divide the dim
+        fixed = []
+        for dim, ax in zip(leaf.shape, full):
+            if ax is None or mesh is None:
+                fixed.append(ax)
+                continue
+            axes = list(ax) if isinstance(ax, tuple) else [ax]
+            while axes:
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                if dim % size == 0:
+                    break
+                axes.pop()          # drop the least-important (fsdp) axis
+            fixed.append(tuple(axes) if len(axes) > 1
+                         else (axes[0] if axes else None))
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, P]:
+    """Input shardings for train/prefill batches."""
+    daxes = data_axes(mesh)
+    bs = daxes if shape.global_batch > 1 else None
+    specs: Dict[str, P] = {
+        "tokens": P(bs, None),
+        "labels": P(bs, None),
+    }
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(bs, None, None)
+        specs["patch_pos"] = P(bs, None)
+    if cfg.family == "audio":
+        specs["frames"] = P(bs, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, P]:
+    """Decode-cache shardings.
+
+    decode_32k (B=128): batch over data axes, kv-heads over model when
+    divisible, else sequence over model.
+    long_500k (B=1): batch unshardable -> shard cache SEQUENCE over the
+    data axes (context-parallel serving — DHP's CP applied to decode)
+    and heads over model.
+    """
+    daxes = data_axes(mesh)
+    batch_shardable = shape.global_batch > 1
+    b_ax = daxes if batch_shardable else None
+    seq_data = None if batch_shardable else daxes
+
+    # heads over `model` when divisible, else the cache SEQUENCE over
+    # `model` (distributed-softmax decode — CP applied to serving).
+    tp_heads = mesh is not None and cfg.kv_heads \
+        and cfg.kv_heads % mesh.shape[TP] == 0
+    head_ax = TP if tp_heads else None
+    seq_tp = None if tp_heads else TP
+    # combine data-seq and model-seq sharding axes
+    seq_axes = []
+    if seq_data:
+        seq_axes.extend(seq_data if isinstance(seq_data, tuple)
+                        else (seq_data,))
+    if seq_tp:
+        seq_axes.append(seq_tp)
+    seq_spec = tuple(seq_axes) if seq_axes else None
+
+    kv = P(None, b_ax, seq_spec, head_ax, None)
+    specs: Dict[str, Any] = {"pos": P()}
+    if cfg.family in ("dense", "moe", "vlm"):
+        specs.update(k=kv, v=kv)
+    elif cfg.family == "ssm":
+        specs.update(
+            h=P(None, b_ax, TP, None, None),
+            conv_buf=P(None, b_ax, None, TP),
+        )
+    elif cfg.family == "hybrid":
+        specs.update(
+            rec_h=P(None, None, b_ax, None),
+            rec_conv=P(None, None, b_ax, None, None),
+            k=P(None, None, b_ax, seq_spec, head_ax, None),
+            v=P(None, None, b_ax, seq_spec, head_ax, None),
+            tail_h=P(None, b_ax, None),
+            tail_conv=P(None, b_ax, None, None),
+        )
+    elif cfg.family == "audio":
+        specs.update(k=kv, v=kv,
+                     cross_k=P(None, b_ax, None, head_ax, None),
+                     cross_v=P(None, b_ax, None, head_ax, None))
+    return specs

@@ -1,0 +1,42 @@
+"""Serving: batched one-token decode steps (the decode_* input shapes).
+
+`make_serve_step(cfg)` returns the jit-able step lowered by the dry-run:
+one new token against a KV/state cache of `seq_len` capacity.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from ..models.model import decode_step, init_cache
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache: Dict[str, Any], tokens: jax.Array
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+        logits, cache = decode_step(params, cfg, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step
+
+
+def cache_for_shape(cfg: ModelConfig, shape: InputShape,
+                    dtype=None) -> Dict[str, Any]:
+    cache = init_cache(cfg, shape.global_batch, shape.seq_len, dtype)
+    # decode starts with a full context
+    return {**cache, "pos": jnp.asarray(shape.seq_len, jnp.int32)}
+
+
+def greedy_generate(params, cfg: ModelConfig, cache, first_token,
+                    n_tokens: int):
+    """Host-loop generation used by examples/tests (not the dry-run)."""
+    step = jax.jit(make_serve_step(cfg))
+    tok = first_token
+    out = []
+    for _ in range(n_tokens):
+        tok, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.stack(out, axis=1), cache

@@ -1,0 +1,80 @@
+"""The assigned architectures must match the assignment sheet exactly."""
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, \
+    get_config
+
+EXPECTED = {
+    # arch: (L, d_model, H, kv, d_ff, vocab, family)
+    "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155, "moe"),
+    "llama3-405b": (126, 16384, 128, 8, 53248, 128256, "dense"),
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304, "moe"),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865, "audio"),
+    "minitron-4b": (32, 3072, 24, 8, 9216, 256000, "dense"),
+    "glm4-9b": (40, 4096, 32, 2, 13696, 151552, "dense"),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000, "hybrid"),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024, "dense"),
+    "mamba2-370m": (48, 1024, 0, 0, 0, 50280, "ssm"),
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072, "vlm"),
+}
+
+
+def test_ten_archs_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert set(ASSIGNED_ARCHS) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED))
+def test_config_matches_assignment(arch):
+    L, d, h, kv, ff, v, fam = EXPECTED[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == v
+    assert cfg.family == fam
+    assert cfg.source, "every config must cite its source"
+
+
+def test_family_extras():
+    assert get_config("granite-moe-1b-a400m").moe.n_experts == 32
+    assert get_config("granite-moe-1b-a400m").moe.top_k == 8
+    assert get_config("olmoe-1b-7b").moe.n_experts == 64
+    assert get_config("mamba2-370m").ssm.d_state == 128
+    assert get_config("recurrentgemma-2b").hybrid.pattern == \
+        ("rec", "rec", "attn")
+    assert get_config("recurrentgemma-2b").hybrid.window == 2048
+    assert get_config("whisper-small").encdec.n_audio_frames == 1500
+    assert get_config("pixtral-12b").vlm.vision_dim == 1024
+    assert get_config("chatglm3-6b").rope_2d
+
+
+def test_input_shapes_assignment():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == \
+        (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == \
+        (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == \
+        (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == \
+        (524288, 1)
+
+
+def test_reduced_variants_bounded():
+    for arch in ALL_ARCHS:
+        r = get_config(arch).reduced()
+        assert r.n_layers <= 3
+        assert r.d_model <= 512
+        if r.moe:
+            assert r.moe.n_experts <= 4
+
+
+def test_sub_quadratic_flags():
+    assert get_config("mamba2-370m").sub_quadratic()
+    assert get_config("recurrentgemma-2b").sub_quadratic()
+    assert not get_config("llama3-405b").sub_quadratic()
+    assert get_config("llama3-405b").with_(
+        sliding_window=8192).sub_quadratic()

@@ -1,0 +1,61 @@
+"""The multi-pod dry-run machinery itself: one real (arch × shape) pair
+lowered + compiled on the 512-placeholder-device production mesh in a
+subprocess (the full sweep is `python -m repro.launch.dryrun --all`)."""
+import json
+import os
+import subprocess
+import sys
+
+
+def test_dryrun_single_pair_compiles(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)   # dryrun sets its own 512-device flag
+    script = f"""
+from repro.launch.dryrun import run_pair
+rec = run_pair("mamba2-370m", "long_500k", multi_pod=False,
+               out_dir={str(tmp_path)!r}, quiet=True)
+assert rec["roofline"]["flops_per_device"] > 0
+assert rec["roofline"]["t_lower_bound_s"] > 0
+print("OK", rec["mesh"], rec["n_devices"])
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, (r.stdout, r.stderr)
+    assert "OK 16x16 256" in r.stdout
+    fn = tmp_path / "mamba2-370m__long_500k__16x16.json"
+    rec = json.loads(fn.read_text())
+    # roofline terms present + the multi-pod JSON schema is stable
+    ro = rec["roofline"]
+    for k in ("t_compute_s", "t_memory_s", "t_collective_s",
+              "bottleneck", "collective_by_kind"):
+        assert k in ro, k
+    assert rec["useful_flops_ratio"] is None or \
+        rec["useful_flops_ratio"] >= 0
+
+
+def test_dryrun_variant_plumbing(tmp_path):
+    """§Perf variants must reach the lowered program: the sort-dispatch
+    variant on an MoE arch changes the compiled FLOPs vs einsum."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    script = f"""
+from repro.launch.dryrun import run_pair
+a = run_pair("granite-moe-1b-a400m", "long_500k", multi_pod=False,
+             out_dir={str(tmp_path)!r}, quiet=True,
+             variant={{"moe_dispatch": "einsum"}}, tag="__e")
+b = run_pair("granite-moe-1b-a400m", "long_500k", multi_pod=False,
+             out_dir={str(tmp_path)!r}, quiet=True,
+             variant={{"moe_dispatch": "sort"}}, tag="__s")
+fa = a["roofline"]["flops_per_device"]
+fb = b["roofline"]["flops_per_device"]
+assert fa != fb, (fa, fb)
+print("OK", fa, fb)
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, (r.stdout, r.stderr)
+    assert "OK" in r.stdout

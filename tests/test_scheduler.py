@@ -1,0 +1,203 @@
+"""DHP core: cost model (Eqs. 7-10), BFD packing, 2D-DP (Alg. 1),
+scheduler workflow — unit + hypothesis property tests."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CostCoeffs, CostModel, DHPScheduler, Hardware,
+                        SeqInfo, allocate, allocate_bruteforce,
+                        analytic_coeffs, pack_sequences, sample_batch,
+                        static_plan, validate_packing)
+from repro.core.packing import AtomicGroup
+
+COEFFS = CostCoeffs(a1=1e-9, a2=1e-5, b1=1e-3, a3=1e-6, b2=1e-4,
+                    m_token=1.0, m_ms=0.0)
+CM = CostModel(COEFFS, Hardware(intra_bw=50, inter_bw=6, ranks_per_node=8))
+
+
+def seqs_of(lengths, etas=None):
+    etas = etas or [0.0] * len(lengths)
+    return [SeqInfo(length=l, eta=e, seq_id=i)
+            for i, (l, e) in enumerate(zip(lengths, etas))]
+
+
+# ---------------------------------------------------------------- cost model
+def test_memory_eq7():
+    s = seqs_of([100, 200])
+    assert CM.memory(s) == pytest.approx(300 * COEFFS.m_token + COEFFS.m_ms)
+
+
+def test_compute_eq8_eta_factor():
+    """Full-attention (eta=1) tokens cost 2x the quadratic term (§4.2)."""
+    causal = CM.compute_time(seqs_of([1000]), 1)
+    full = CM.compute_time(seqs_of([1000], [1.0]), 1)
+    quad = COEFFS.a1 * 1000 ** 2
+    assert full - causal == pytest.approx(quad)
+
+
+def test_comm_eq9_zero_at_degree_1():
+    s = seqs_of([4096])
+    assert CM.comm_time(s, 1) == 0.0
+    assert CM.comm_time(s, 4) > 0.0
+
+
+def test_overlap_eq10():
+    """T = T_cp + T_cm - min(T_cpa, T_cma)."""
+    s = seqs_of([8192])
+    d = 4
+    t = CM.group_time(s, d)
+    expected = (CM.compute_time(s, d) + CM.comm_time(s, d)
+                - min(CM.attn_compute_time(s, d), CM.attn_comm_time(s, d)))
+    assert t == pytest.approx(expected)
+
+
+def test_ring_bandwidth_topology():
+    hw = Hardware(intra_bw=50, inter_bw=6, ranks_per_node=8)
+    assert hw.ring_bandwidth(8) == 50
+    assert hw.ring_bandwidth(9) == 6    # crosses the node boundary
+
+
+def test_min_degree_ceil():
+    cm = CostModel(dataclasses.replace(COEFFS, m_token=2.0))
+    assert cm.min_degree(seqs_of([100]), budget=150.0) == 2  # 200B / 150B
+
+
+# ---------------------------------------------------------------- packing
+def test_bfd_packs_short_into_long_bins():
+    s = seqs_of([1000, 100, 100])
+    groups = pack_sequences(s, CM, budget=1300.0)
+    assert len(groups) == 1           # shorts best-fit into the long bin
+    validate_packing(groups, CM, 1300.0)
+
+
+def test_bfd_opens_new_bin_when_full():
+    s = seqs_of([1000, 900, 800])
+    groups = pack_sequences(s, CM, budget=1000.0)
+    assert len(groups) == 3
+    validate_packing(groups, CM, 1000.0)
+
+
+def test_bfd_min_degree_for_long_seq():
+    s = seqs_of([2500])
+    groups = pack_sequences(s, CM, budget=1000.0)
+    assert groups[0].d_min == 3       # ceil(2500/1000)
+
+
+def test_bfd_rejects_oversized():
+    with pytest.raises(ValueError):
+        pack_sequences(seqs_of([10_000]), CM, budget=1000.0, max_degree=4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(10, 5000), min_size=1, max_size=40),
+       st.floats(600.0, 5000.0))
+def test_bfd_invariants(lengths, budget):
+    """Every sequence lands in exactly one bin; Eq. (3) always holds."""
+    s = seqs_of(lengths)
+    groups = pack_sequences(s, CM, budget)
+    packed = sorted(x.seq_id for g in groups for x in g.seqs)
+    assert packed == list(range(len(s)))          # Conds (4)+(5)
+    validate_packing(groups, CM, budget)           # Cond (3)
+
+
+# ---------------------------------------------------------------- allocator
+def _groups_from(lengths, budget=4000.0):
+    return pack_sequences(seqs_of(lengths), CM, budget)
+
+
+def test_dp_matches_bruteforce_small():
+    g = _groups_from([3000, 2000, 500])
+    a = allocate(g, 6, CM.group_time, use_all_ranks=False)
+    b = allocate_bruteforce(g, 6, CM.group_time)
+    assert a.makespan == pytest.approx(b.makespan)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(100, 8000), min_size=1, max_size=5),
+       st.integers(2, 8))
+def test_dp_optimality_property(lengths, n_ranks):
+    """Alg. 1 is exactly optimal for the separable makespan objective."""
+    g = _groups_from(lengths, budget=9000.0)
+    if sum(x.d_min for x in g) > n_ranks:
+        return
+    a = allocate(g, n_ranks, CM.group_time, use_all_ranks=False)
+    b = allocate_bruteforce(g, n_ranks, CM.group_time)
+    assert a.makespan == pytest.approx(b.makespan, rel=1e-9)
+
+
+def test_dp_respects_min_degrees_and_rank_budget():
+    g = _groups_from([7000, 6000, 2000], budget=3000.0)
+    a = allocate(g, 10, CM.group_time)
+    for gr, d in zip(g, a.degrees):
+        assert d >= gr.d_min
+    assert a.ranks_used <= 10
+
+
+def test_dp_infeasible_raises():
+    g = _groups_from([9000, 9000], budget=3000.0)   # needs 3+3 ranks
+    with pytest.raises(ValueError):
+        allocate(g, 4, CM.group_time)
+
+
+def test_non_power_of_two_degrees_appear():
+    """The paper's headline flexibility: degrees like 3, 5, 6."""
+    rng = np.random.default_rng(3)
+    seqs = sample_batch("openvid", 64, rng, max_tokens=40_000)
+    cm = CostModel(dataclasses.replace(
+        COEFFS, m_token=1.0, m_ms=0.0))
+    sched = DHPScheduler(cm, 13, mem_budget=9000.0)
+    plan = sched.schedule(seqs)
+    degrees = set(plan.degree_histogram)
+    assert any(d not in (1, 2, 4, 8, 16) for d in degrees), degrees
+
+
+# ---------------------------------------------------------------- scheduler
+def test_plan_covers_all_sequences_once():
+    rng = np.random.default_rng(0)
+    seqs = sample_batch("openvid", 128, rng, max_tokens=65536)
+    cm = CostModel(analytic_coeffs(hidden=2048, n_layers=24, n_heads=16,
+                                   kv_heads=8, ffn=8192, vocab=50000))
+    sched = DHPScheduler(cm, 16, mem_budget=8e9)
+    plan = sched.schedule(seqs)
+    ids = sorted(i for mb in plan.micro_batches for g in mb.groups
+                 for i in g.seq_ids)
+    assert ids == list(range(128))
+    for mb in plan.micro_batches:
+        assert sum(g.degree for g in mb.groups) <= 16       # Cond (6)
+
+
+def test_async_prepare_collect():
+    rng = np.random.default_rng(1)
+    seqs = sample_batch("msrvtt", 32, rng, max_tokens=30000)
+    cm = CostModel(analytic_coeffs(hidden=1024, n_layers=12, n_heads=8,
+                                   kv_heads=8, ffn=4096, vocab=32000))
+    sched = DHPScheduler(cm, 8, mem_budget=4e9)
+    sched.prepare(seqs)
+    plan = sched.collect()
+    assert plan.micro_batches
+    sync = sched.schedule(seqs)
+    assert plan.degree_histogram == sync.degree_histogram
+
+
+def test_static_plan_uses_all_groups():
+    rng = np.random.default_rng(2)
+    seqs = sample_batch("internvid", 64, rng, max_tokens=30000)
+    cm = CostModel(analytic_coeffs(hidden=1024, n_layers=12, n_heads=8,
+                                   kv_heads=8, ffn=4096, vocab=32000))
+    plan = static_plan(seqs, cm, 16, 8e9)
+    assert plan.total_time_est > 0
+    ids = sorted(i for mb in plan.micro_batches for g in mb.groups
+                 for i in g.seq_ids)
+    assert ids == list(range(64))
+
+
+def test_deepspeed_power_of_two_restriction():
+    rng = np.random.default_rng(2)
+    cm = CostModel(dataclasses.replace(COEFFS, m_token=1e6))
+    seqs = sample_batch("openvid", 16, rng, max_tokens=20000)
+    p = static_plan(seqs, cm, 16, 8e9, power_of_two=True)
+    for mb in p.micro_batches:
+        for g in mb.groups:
+            assert g.degree & (g.degree - 1) == 0     # power of two

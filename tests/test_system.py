@@ -1,0 +1,203 @@
+"""End-to-end behaviour tests for the paper's system: the full
+global-batch -> micro-batch planner -> BFD packing -> 2D-DP -> plan
+pipeline, validated against the formal constraints of §4.1 (Eqs. 3-6)
+and the paper's qualitative claims (Table 4, §6.3 overlap)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (CostModel, DHPScheduler, analytic_coeffs,
+                        sample_batch, static_plan)
+from repro.core.cost_model import SeqInfo
+from repro.core.simulator import ClusterSimulator
+
+COEFFS = dataclasses.replace(
+    analytic_coeffs(hidden=2048, n_layers=24, n_heads=16, kv_heads=8,
+                    ffn=8192, vocab=32000),
+    m_ms=0.0)
+CM = CostModel(COEFFS)
+
+
+def _budget(seqs, n_ranks, frac=0.35):
+    """A memory budget that forces degree>1 for the longest sequences."""
+    longest = max(s.length for s in seqs)
+    return longest * COEFFS.m_token * frac
+
+
+def _validate_plan_constraints(plan, seqs, n_ranks, budget):
+    """Eqs. (3)-(6) must hold for every micro-batch of the plan."""
+    all_ids = {s.seq_id for s in seqs}
+    by_id = {s.seq_id: s for s in seqs}
+    seen = set()
+    for mb in plan.micro_batches:
+        ranks = 0
+        for g in mb.groups:
+            # Eq. 5: exclusive assignment
+            for sid in g.seq_ids:
+                assert sid not in seen, f"sequence {sid} assigned twice"
+                seen.add(sid)
+            # Eq. 3: per-rank memory limit
+            mem = CM.memory([by_id[sid] for sid in g.seq_ids])
+            assert mem <= budget * g.degree + 1e-6, \
+                f"memory {mem:.1f} > E*d = {budget * g.degree:.1f}"
+            ranks += g.degree
+        # Eq. 6: rank budget per micro-batch
+        assert ranks <= n_ranks
+        # makespan is the max group time (Eq. 2 objective)
+        assert mb.makespan == pytest.approx(
+            max(g.est_time for g in mb.groups))
+    # Eq. 5 (completeness): every sequence scheduled exactly once
+    assert seen == all_ids
+
+
+@pytest.mark.parametrize("dataset", ["msrvtt", "internvid", "openvid"])
+@pytest.mark.parametrize("n_ranks", [7, 8, 24, 64])
+def test_plan_satisfies_paper_constraints(dataset, n_ranks):
+    seqs = sample_batch(dataset, 64, np.random.default_rng(3),
+                        max_tokens=60_000)
+    budget = _budget(seqs, n_ranks)
+    plan = DHPScheduler(CM, n_ranks, budget).schedule(seqs)
+    _validate_plan_constraints(plan, seqs, n_ranks, budget)
+
+
+def test_dhp_beats_or_matches_static_everywhere():
+    """The dynamic plan's estimated makespan must never be worse than the
+    best static plan under the SAME cost model (it can always fall back
+    to a uniform partition)."""
+    for dataset in ("msrvtt", "internvid", "openvid"):
+        for n_ranks in (8, 16, 64):
+            seqs = sample_batch(dataset, 96, np.random.default_rng(11),
+                                max_tokens=80_000)
+            budget = _budget(seqs, n_ranks)
+            dhp = DHPScheduler(CM, n_ranks, budget).schedule(seqs)
+            static = static_plan(seqs, CM, n_ranks, budget)
+            assert dhp.total_time_est <= static.total_time_est * 1.0001, \
+                (dataset, n_ranks, dhp.total_time_est,
+                 static.total_time_est)
+
+
+def test_diverse_data_gets_less_consistent_degrees():
+    """Paper Table 4 / §6.5: 'for relatively uniform data (MSRVTT), the
+    CP degrees remain more consistent' — i.e. the modal degree covers a
+    larger share of groups than on long-tailed OpenVid. Uses the same
+    absolute-hardware calibration as benchmarks/bench_case_study."""
+    cm = CostModel(analytic_coeffs(hidden=3584, n_layers=28, n_heads=28,
+                                   kv_heads=4, ffn=18944, vocab=152000))
+    budget = 3e9
+    rng = np.random.default_rng(7)
+
+    def top_share(ds):
+        seqs = sample_batch(ds, 64, rng, max_tokens=262144)
+        h = DHPScheduler(cm, 32, budget, balance_packing=False,
+                         serial_fallback=False).schedule(
+            seqs).degree_histogram
+        return max(h.values()) / sum(h.values()), h
+
+    share_open, h_open = top_share("openvid")
+    share_msr, h_msr = top_share("msrvtt")
+    assert share_msr > share_open, (h_msr, h_open)
+    # and the dynamic mesh actually uses heterogeneous degrees on openvid
+    assert len(h_open) >= 3, h_open
+
+
+def test_scheduling_overlappable_with_compute():
+    """§6.3: scheduling latency must stay below the batch compute time so
+    the producer-consumer overlap hides it completely."""
+    seqs = sample_batch("openvid", 512, np.random.default_rng(7),
+                        max_tokens=60_000)
+    budget = _budget(seqs, 64)
+    plan = DHPScheduler(CM, 64, budget).schedule(seqs)
+    assert plan.schedule_ms / 1e3 < plan.total_time_est, \
+        (plan.schedule_ms, plan.total_time_est)
+
+
+def test_simulator_speedup_positive_on_heterogeneous_data():
+    """Fig. 4/6 direction: on long-tailed data DHP improves over the best
+    static baseline under the shared cost model."""
+    seqs = sample_batch("openvid", 256, np.random.default_rng(13),
+                        max_tokens=100_000)
+    sim = ClusterSimulator(CM, n_ranks=32, mem_budget=_budget(seqs, 32))
+    res = sim.compare(seqs)
+    best_static = min(res["megatron-lm"].iter_time_s,
+                      res["deepspeed"].iter_time_s)
+    assert res["dhp"].iter_time_s <= best_static
+    assert res["dhp-faithful"].iter_time_s <= best_static * 1.02
+
+
+def test_degenerate_batches():
+    """System stays correct on edge-case batches."""
+    n_ranks, budget = 8, 1e9
+    # single short sequence
+    plan = DHPScheduler(CM, n_ranks, budget).schedule(
+        [SeqInfo(length=128, seq_id=0)])
+    _validate_plan_constraints(plan, [SeqInfo(length=128, seq_id=0)],
+                               n_ranks, budget)
+    # all-identical sequences
+    seqs = [SeqInfo(length=4096, seq_id=i) for i in range(16)]
+    plan = DHPScheduler(CM, n_ranks, budget).schedule(seqs)
+    _validate_plan_constraints(plan, seqs, n_ranks, budget)
+    # one sequence that needs every rank
+    tight = CM.memory([SeqInfo(length=65_536)]) / 8 * 1.01
+    seqs = [SeqInfo(length=65_536, seq_id=0)]
+    plan = DHPScheduler(CM, 8, tight).schedule(seqs)
+    _validate_plan_constraints(plan, seqs, 8, tight)
+    assert plan.micro_batches[0].groups[0].degree == 8
+
+
+def test_eta_full_attention_raises_cost_and_degree():
+    """Eq. 8's mask-efficiency factor: vision-heavy (eta=1) sequences
+    cost more and therefore earn higher CP degrees."""
+    n_ranks = 16
+    text = [SeqInfo(length=16_384, eta=0.0, seq_id=0)]
+    vision = [SeqInfo(length=16_384, eta=1.0, seq_id=0)]
+    assert CM.compute_time(vision, 1) > CM.compute_time(text, 1)
+    budget = CM.memory(text) / 2
+    d_text = DHPScheduler(CM, n_ranks, budget).schedule(
+        text).micro_batches[0].groups[0].degree
+    d_vis = DHPScheduler(CM, n_ranks, budget).schedule(
+        vision).micro_batches[0].groups[0].degree
+    assert d_vis >= d_text
+
+
+def test_end_to_end_training_dynamic_regrouping(subproc):
+    """Full system on 8 host devices: heterogeneous loader -> async DHP
+    scheduler -> executor; loss must decrease and the plan must actually
+    use heterogeneous degrees across steps."""
+    subproc("""
+import dataclasses, jax, numpy as np
+from repro.configs import get_config
+from repro.core import CostModel, DHPScheduler, analytic_coeffs
+from repro.core.executor import DHPExecutor
+from repro.data.pipeline import HeterogeneousLoader
+from repro.models.model import init_params
+from repro.training.optimizer import AdamW
+from repro.training.train_step import TrainState
+
+cfg = get_config("internvl3-2b").reduced().with_(family="dense", vlm=None)
+params = init_params(jax.random.PRNGKey(0), cfg)
+opt = AdamW(lr=3e-3)
+state = TrainState(params, opt.init(params))
+loader = HeterogeneousLoader("openvid", 12, cfg.vocab, seed=3,
+                             max_tokens=512, tokens_per_frame=16)
+coeffs = dataclasses.replace(
+    analytic_coeffs(hidden=cfg.d_model, n_layers=cfg.n_layers,
+                    n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+                    ffn=cfg.d_ff, vocab=cfg.vocab), m_ms=0.0, m_token=1.0)
+sched = DHPScheduler(CostModel(coeffs), 8, mem_budget=900.0)
+ex = DHPExecutor(cfg)
+losses, degrees = [], set()
+it = iter(loader)
+for step in range(6):
+    data = next(it)
+    plan = sched.schedule(data.infos)
+    degrees.update(g.degree for mb in plan.micro_batches
+                   for g in mb.groups)
+    loss, grads = ex.run_plan(state.params, plan, data)
+    p, o = opt.update(grads, state.opt, state.params)
+    state = TrainState(p, o)
+    losses.append(float(loss))
+assert losses[-1] < losses[0], losses
+assert len(degrees) >= 2, degrees
+print("ok", losses[0], "->", losses[-1], "degrees", sorted(degrees))
+""", n_devices=8)
