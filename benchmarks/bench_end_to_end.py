@@ -1,10 +1,19 @@
 """Figures 4 & 6 — simulated end-to-end iteration time + speedups per
 (model x dataset). Paper: 1.14x-1.36x over the best static baseline,
 largest on OpenVid / 8B models.
+
+One code path for every row: each scheduling policy is pulled from the
+`repro.api` strategy registry, bound to the same cost model, and its
+strategy-attributed ExecutionPlans are aggregated into a per-strategy
+comparison table (iteration time, scheduling latency and its per-stage
+split). Adding a policy to the comparison = adding its registry name.
 """
 from __future__ import annotations
 
-from repro.core import CostModel, analytic_coeffs, end_to_end_table
+import numpy as np
+
+from repro.api import get_strategy
+from repro.core import CostModel, analytic_coeffs, sample_batch
 
 # paper Table 5 (Appendix A.1) — all six evaluated models
 MODELS = {
@@ -22,17 +31,63 @@ MODELS = {
                        ffn=12288, vocab=151674),
 }
 
+# the evaluated scheduling policies, by registry name
+STRATEGIES = ("dhp", "dhp-faithful", "megatron", "deepspeed")
+STATIC = ("megatron", "deepspeed")
 
-def run(report):
-    for name, kw in MODELS.items():
+
+def strategy_table(cost_model: CostModel, *, n_ranks: int,
+                   mem_budget: float, datasets, gbs: int, iters: int,
+                   seed: int = 0, max_tokens=None,
+                   strategies=STRATEGIES):
+    """Plan `iters` sampled batches per dataset with every strategy;
+    returns {dataset: {strategy: {time_s, schedule_ms, stage_ms}}}."""
+    rng = np.random.default_rng(seed)
+    strats = {name: get_strategy(name).bind(cost_model, n_ranks,
+                                            mem_budget)
+              for name in strategies}
+    table = {}
+    for ds in datasets:
+        acc = {name: {"time_s": 0.0, "schedule_ms": 0.0, "stage_ms": {}}
+               for name in strategies}
+        for _ in range(iters):
+            seqs = sample_batch(ds, gbs, rng, max_tokens=max_tokens)
+            for name, strat in strats.items():
+                plan = strat.plan(seqs)
+                assert plan.strategy_name == name
+                acc[name]["time_s"] += plan.total_time_est / iters
+                acc[name]["schedule_ms"] += plan.schedule_ms / iters
+                for k, v in plan.stage_ms.items():
+                    acc[name]["stage_ms"][k] = (
+                        acc[name]["stage_ms"].get(k, 0.0) + v / iters)
+        table[ds] = acc
+    return table
+
+
+def run(report, smoke: bool = False):
+    models = (dict(list(MODELS.items())[:1]) if smoke else MODELS)
+    iters = 1 if smoke else 3
+    gbs = 64 if smoke else 512
+    datasets = ("openvid",) if smoke else ("msrvtt", "internvid",
+                                           "openvid")
+    for name, kw in models.items():
         cm = CostModel(analytic_coeffs(**kw))
-        rows = end_to_end_table(cm, n_ranks=64, mem_budget=8e9, gbs=512,
-                                iters=3, max_tokens=262144)
-        for r in rows:
-            report(f"fig4/{name}/{r['dataset']}",
-                   r["dhp_s"] * 1e6,
-                   f"faithful_speedup="
-                   f"{r['speedup_faithful_vs_best_static']:.2f}x "
-                   f"optimized_speedup={r['speedup_vs_best_static']:.2f}x "
-                   f"megatron={r['megatron_s']:.2f}s "
-                   f"deepspeed={r['deepspeed_s']:.2f}s")
+        table = strategy_table(cm, n_ranks=64, mem_budget=8e9,
+                               datasets=datasets, gbs=gbs, iters=iters,
+                               max_tokens=262144)
+        for ds, acc in table.items():
+            best_static = min(acc[s]["time_s"] for s in STATIC)
+            for sname in STRATEGIES:
+                r = acc[sname]
+                stages = " ".join(f"{k}={v:.1f}ms"
+                                  for k, v in r["stage_ms"].items())
+                report(f"fig4/{name}/{ds}/{sname}",
+                       r["time_s"] * 1e6,
+                       f"speedup_vs_best_static="
+                       f"{best_static / r['time_s']:.2f}x "
+                       f"sched={r['schedule_ms']:.1f}ms {stages}")
+
+
+def run_smoke(report):
+    """CI perf canary: one model x one dataset x every strategy."""
+    run(report, smoke=True)

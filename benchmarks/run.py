@@ -8,21 +8,24 @@ Prints ``name,us_per_call,derived`` CSV rows.
   table3    — cost-estimator error                   (Table 3)
   table4    — case-study CP-group decompositions     (Table 4)
   kernels   — flash-attention / rglru micro-bench
+
+``--smoke`` runs the fast per-strategy end-to-end comparison only
+(seconds, not minutes) — the CI perf canary that surfaces scheduling
+regressions in PRs.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
-    from . import (bench_ablation, bench_case_study, bench_end_to_end,
-                   bench_estimator, bench_kernels, bench_scaling,
-                   bench_solver)
-    mods = [("solver", bench_solver), ("end_to_end", bench_end_to_end),
-            ("scaling", bench_scaling), ("estimator", bench_estimator),
-            ("case_study", bench_case_study), ("ablation", bench_ablation),
-            ("kernels", bench_kernels)]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: per-strategy end-to-end table")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     failed = []
 
@@ -30,9 +33,25 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
 
-    for name, mod in mods:
+    if args.smoke:
+        from . import bench_end_to_end
+        mods = [("end_to_end[smoke]",
+                 lambda r: bench_end_to_end.run_smoke(r))]
+    else:
+        from . import (bench_ablation, bench_case_study,
+                       bench_end_to_end, bench_estimator, bench_kernels,
+                       bench_scaling, bench_solver)
+        mods = [("solver", bench_solver.run),
+                ("end_to_end", bench_end_to_end.run),
+                ("scaling", bench_scaling.run),
+                ("estimator", bench_estimator.run),
+                ("case_study", bench_case_study.run),
+                ("ablation", bench_ablation.run),
+                ("kernels", bench_kernels.run)]
+
+    for name, runner in mods:
         try:
-            mod.run(report)
+            runner(report)
         except Exception:   # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

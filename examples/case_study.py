@@ -1,6 +1,10 @@
-"""Paper Table-4 / Fig.-2 case study: how DHP decomposes two batches
-with different length distributions into heterogeneous CP groups, with
-an ASCII rendering of the static-vs-dynamic mesh occupancy.
+"""Paper Table-4 / Fig.-2 case study: how each registered strategy
+decomposes two batches with different length distributions into CP
+groups, with an ASCII rendering of the static-vs-dynamic mesh occupancy.
+
+Every planner is pulled from the `repro.api` strategy registry and
+bound to the same cost model — adding a row to the comparison is one
+`get_strategy(name)` call.
 
   python examples/case_study.py
 """
@@ -10,14 +14,23 @@ sys.path.insert(0, "src")
 
 import numpy as np                                     # noqa: E402
 
-from repro.core import (CostModel, DHPScheduler, analytic_coeffs,
-                        sample_batch, static_plan)     # noqa: E402
+from repro.api import get_strategy                     # noqa: E402
+from repro.core import (CostModel, analytic_coeffs,
+                        sample_batch)                  # noqa: E402
 
 N_RANKS = 32
 
+# (label, registry name, constructor overrides)
+LINEUP = [
+    ("STATIC (Megatron-style)", "megatron", {}),
+    ("DHP (paper-faithful)", "dhp-faithful", {}),
+    ("DHP (+beyond-paper refinements)", "dhp", {}),
+]
+
 
 def render(plan, n_ranks, title, max_cols=64):
-    print(f"\n{title}: est {plan.total_time_est:.2f}s, "
+    print(f"\n{title} [{plan.strategy_name}]: "
+          f"est {plan.total_time_est:.2f}s, "
           f"degrees {plan.degree_histogram}")
     scale = max(mb.makespan for mb in plan.micro_batches) or 1.0
     for i, mb in enumerate(plan.micro_batches[:8]):
@@ -46,17 +59,17 @@ def main():
         print("=" * 72)
         print(f"{case}: {len(seqs)} seqs, median {lens[len(lens)//2]} "
               f"tokens, max {lens[-1]}")
-        faithful = DHPScheduler(cm, N_RANKS, budget, balance_packing=False,
-                                serial_fallback=False).schedule(seqs)
-        optimized = DHPScheduler(cm, N_RANKS, budget).schedule(seqs)
-        static = static_plan(seqs, cm, N_RANKS, budget)
-        render(static, N_RANKS, "STATIC (Megatron-style)")
-        render(faithful, N_RANKS, "DHP (paper-faithful)")
-        render(optimized, N_RANKS, "DHP (+beyond-paper refinements)")
+        plans = {}
+        for label, name, overrides in LINEUP:
+            strat = get_strategy(name, **overrides).bind(
+                cm, N_RANKS, budget)
+            plans[label] = strat.plan(seqs)
+            render(plans[label], N_RANKS, label)
+        static_t = plans[LINEUP[0][0]].total_time_est
         print(f"\n  speedup faithful: "
-              f"{static.total_time_est / faithful.total_time_est:.2f}x,"
+              f"{static_t / plans[LINEUP[1][0]].total_time_est:.2f}x,"
               f" optimized: "
-              f"{static.total_time_est / optimized.total_time_est:.2f}x")
+              f"{static_t / plans[LINEUP[2][0]].total_time_est:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
-"""End-to-end DHP training driver — the paper's system running for real.
+"""End-to-end DHP training driver — the paper's system running for real,
+now expressed entirely through the `repro.api` Engine.
 
-Heterogeneous video-length batches -> async DHP scheduler (BFD packing +
-2D-DP) -> executor dispatching Ring-CP groups over 8 host devices, with
-group/executable pooling. Compares against the static baseline and
-prints the per-step degree histograms (the Table-4 view, live).
+Heterogeneous video-length batches -> async Strategy planning (BFD
+packing + 2D-DP on a host thread) -> executor dispatching Ring-CP groups
+over 8 host devices, with group/executable pooling. `--compare-static`
+re-plans the first batch with the static baseline strategy from the same
+registry and runs it through the same executor.
 
   python examples/dhp_training.py --steps 30
   python examples/dhp_training.py --steps 300 --d-model 512 --layers 12
@@ -18,7 +20,6 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
 import argparse      # noqa: E402
-import dataclasses   # noqa: E402
 import sys           # noqa: E402
 import time          # noqa: E402
 
@@ -27,21 +28,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax           # noqa: E402
 
+from repro.api import ClusterSpec, Engine, get_strategy  # noqa: E402
 from repro.configs import get_config                     # noqa: E402
-from repro.core import (CostModel, DHPScheduler,
-                        analytic_coeffs)                 # noqa: E402
-from repro.core.executor import DHPExecutor              # noqa: E402
-from repro.core.scheduler import static_plan             # noqa: E402
-from repro.data.pipeline import HeterogeneousLoader      # noqa: E402
-from repro.models.model import init_params               # noqa: E402
-from repro.training.optimizer import (AdamW,
-                                      cosine_schedule)   # noqa: E402
-from repro.training.train_step import TrainState         # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internvl3-2b")
+    ap.add_argument("--strategy", default="dhp",
+                    help="dhp | dhp-faithful | static | oracle | ...")
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--gbs", type=int, default=12)
     ap.add_argument("--max-tokens", type=int, default=512)
@@ -66,57 +61,39 @@ def main():
         over["vocab"] = args.vocab
     if over:
         cfg = cfg.with_(**over)
-    n_ranks = len(jax.devices())
-    print(f"devices={n_ranks} arch={cfg.arch_id} L={cfg.n_layers} "
-          f"d={cfg.d_model}")
 
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    print(f"params: {sum(p.size for p in jax.tree.leaves(params))/1e6:.1f}M")
-    opt = AdamW(lr=cosine_schedule(3e-4, 10, args.steps))
-    state = TrainState(params, opt.init(params))
+    cluster = ClusterSpec.auto(mem_budget=args.mem_budget)
+    engine = Engine(cfg, cluster, strategy=args.strategy)
+    print(f"devices={cluster.n_devices} arch={cfg.arch_id} "
+          f"L={cfg.n_layers} d={cfg.d_model}")
+    n_params = sum(p.size for p in jax.tree.leaves(engine.state.params))
+    print(f"params: {n_params/1e6:.1f}M")
 
-    coeffs = dataclasses.replace(
-        analytic_coeffs(hidden=cfg.d_model, n_layers=cfg.n_layers,
-                        n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
-                        ffn=cfg.d_ff, vocab=cfg.vocab),
-        m_ms=0.0, m_token=1.0)
-    cm = CostModel(coeffs)
-    sched = DHPScheduler(cm, n_ranks, mem_budget=args.mem_budget)
-    ex = DHPExecutor(cfg)
-
-    @jax.jit
-    def apply_update(state, grads):
-        p, o = opt.update(grads, state.opt, state.params)
-        return TrainState(p, o)
-
-    loader = iter(HeterogeneousLoader(
-        args.dataset, args.gbs, cfg.vocab, seed=0,
-        max_tokens=args.max_tokens, tokens_per_frame=16))
-    data = next(loader)
-    sched.prepare(data.infos)           # async scheduling (paper §5 (2))
+    if args.compare_static:
+        # plan the same first batch with both strategies, run both
+        # through the same executor — the live Fig.-2 contrast
+        from repro.data.pipeline import HeterogeneousLoader
+        data = next(iter(HeterogeneousLoader(
+            args.dataset, args.gbs, cfg.vocab, seed=0,
+            max_tokens=args.max_tokens, tokens_per_frame=16)))
+        static = get_strategy("static").bind(
+            engine.cost_model, cluster.n_replicas, args.mem_budget)
+        splan = static.plan(data.infos)
+        dplan = engine.plan(data)
+        sm = engine.execute(splan, data, update=False)
+        dm = engine.execute(dplan, data, update=False)
+        print(f"   static-baseline loss={sm.loss:.4f} "
+              f"est {splan.total_time_est:.3f}s "
+              f"vs {args.strategy} est {dplan.total_time_est:.3f}s "
+              f"(loss={dm.loss:.4f})")
 
     t_start = time.perf_counter()
-    for i in range(args.steps):
-        plan = sched.collect()
-        nxt = next(loader)
-        sched.prepare(nxt.infos)        # overlap planning w/ compute
-        t0 = time.perf_counter()
-        loss, grads = ex.run_plan(state.params, plan, data)
-        state = apply_update(state, grads)
-        dt = time.perf_counter() - t0
-        print(f"step {i:3d} loss={float(loss):.4f} "
-              f"degrees={plan.degree_histogram} "
-              f"sched={plan.schedule_ms:.1f}ms step={dt:.2f}s")
-        if args.compare_static and i == 0:
-            splan = static_plan(data.infos, cm, n_ranks, args.mem_budget)
-            sl, _ = ex.run_plan(state.params, splan, data)
-            print(f"   static-baseline loss={float(sl):.4f} "
-                  f"est {splan.total_time_est:.3f}s "
-                  f"vs dhp est {plan.total_time_est:.3f}s")
-        data = nxt
+    history = engine.train(
+        steps=args.steps, dataset=args.dataset, global_batch=args.gbs,
+        max_tokens=args.max_tokens, log=print)
     total = time.perf_counter() - t_start
-    print(f"\n{args.steps} steps in {total:.1f}s; "
-          f"executable pool: {ex.pool.stats}")
+    print(f"\n{len(history)} steps in {total:.1f}s; "
+          f"executable pool: {engine.executor.pool.stats}")
 
 
 if __name__ == "__main__":

@@ -1,71 +1,56 @@
-"""Quickstart: build a model from the registry, train a few steps on
-synthetic data, then decode from it. Pure CPU, < 1 minute.
+"""Quickstart: the whole system through the unified `repro.api` engine —
+build a Session, train a few DHP-scheduled steps on synthetic
+heterogeneous data, then decode from the trained weights. Pure CPU,
+< 1 minute.
 
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   PYTHONPATH=src python examples/quickstart.py [--arch glm4-9b]
+
+(Single-device also works — every group just lands on one rank.)
 """
 import argparse
-import dataclasses
+import os
 import sys
 
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
 sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax                                             # noqa: E402
-import jax.numpy as jnp                                # noqa: E402
 
-from repro.configs import INPUT_SHAPES, get_config     # noqa: E402
-from repro.data.pipeline import synthetic_batch        # noqa: E402
-from repro.models.model import (decode_step, init_cache, init_params,
-                                prefill, prefill_cross_kv)  # noqa: E402
-from repro.training.optimizer import AdamW             # noqa: E402
-from repro.training.train_step import (TrainState,
-                                       make_train_step)  # noqa: E402
+from repro.api import ClusterSpec, Engine              # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--strategy", default="dhp")
     ap.add_argument("--steps", type=int, default=8)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()   # 2-layer CPU-sized variant
+    # 1. a cluster spec: devices + model axis + per-rank token budget
+    cluster = ClusterSpec.auto(mem_budget=900.0)
+    print(f"devices={cluster.n_devices} ranks={cluster.n_replicas}")
+
+    # 2. a session: model x cluster x strategy
+    engine = Engine(args.arch, cluster, strategy=args.strategy,
+                    reduced=True)   # 2-layer CPU-sized variant
+    cfg = engine.cfg
     print(f"arch={cfg.arch_id} family={cfg.family} "
           f"L={cfg.n_layers} d={cfg.d_model} vocab={cfg.vocab}")
+    n_params = sum(p.size for p in jax.tree.leaves(engine.state.params))
+    print(f"params: {n_params/1e6:.2f}M  strategy={engine.strategy.name}")
 
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    n_params = sum(p.size for p in jax.tree.leaves(params))
-    print(f"params: {n_params/1e6:.2f}M")
+    # 3. train — ONE loop for every strategy, async planning built in
+    history = engine.train(steps=args.steps, dataset="openvid",
+                           global_batch=4, max_tokens=256, log=print)
+    print(f"loss {history[0].loss:.4f} -> {history[-1].loss:.4f}")
 
-    opt = AdamW(lr=1e-3)
-    state = TrainState(params, opt.init(params))
-    step = jax.jit(make_train_step(cfg, opt))
-
-    shape = dataclasses.replace(INPUT_SHAPES["train_4k"], seq_len=128,
-                                global_batch=4)
-    for i in range(args.steps):
-        batch = {k: jnp.asarray(v)
-                 for k, v in synthetic_batch(cfg, shape, seed=i).items()}
-        state, metrics = step(state, batch)
-        print(f"step {i}: loss={float(metrics['loss']):.4f}")
-
-    # --- decode a few tokens -------------------------------------------
-    if cfg.family in ("dense", "moe", "vlm"):
-        batch = {k: jnp.asarray(v)
-                 for k, v in synthetic_batch(cfg, shape, seed=0).items()}
-        del batch["labels"]
-        logits, cache = prefill(state.params, cfg, batch, cache_len=160)
-    else:
-        cache = init_cache(cfg, 4, 160)
-        if cfg.family == "audio":
-            b = synthetic_batch(cfg, shape, seed=0)
-            cache = prefill_cross_kv(state.params, cfg,
-                                     jnp.asarray(b["frames"]), cache)
-    tok = jnp.zeros((4,), jnp.int32)
-    toks = []
-    for _ in range(8):
-        lg, cache = decode_step(state.params, cfg, cache, tok)
-        tok = jnp.argmax(lg, -1).astype(jnp.int32)
-        toks.append(int(tok[0]))
-    print("decoded token ids:", toks)
+    # 4. decode a few tokens from the trained weights
+    toks, report = engine.serve(batch=4, prompt_len=32, gen_tokens=8)
+    print(f"decoded token ids: {[int(t) for t in toks[0]]} "
+          f"({report['ms_per_token']:.1f} ms/token)")
 
 
 if __name__ == "__main__":

@@ -1,22 +1,16 @@
-"""Batched serving example: prefill a batch of prompts, then decode with
-the ring-buffer KV cache (the decode_32k / long_500k code path, CPU-sized).
+"""Batched serving example through `Engine.serve`: prefill a batch of
+prompts, then decode with the ring-buffer KV cache (the decode_32k /
+long_500k code path, CPU-sized).
 
   python examples/serve_batched.py [--arch glm4-9b] [--window 64]
 """
 import argparse
 import sys
-import time
 
 sys.path.insert(0, "src")
 
-import jax                                             # noqa: E402
-import jax.numpy as jnp                                # noqa: E402
-
+from repro.api import Engine                           # noqa: E402
 from repro.configs import get_config                   # noqa: E402
-from repro.models.model import init_params, prefill    # noqa: E402
-from repro.serving.serve_step import (cache_for_shape,
-                                      greedy_generate,
-                                      make_serve_step)  # noqa: E402
 
 
 def main():
@@ -32,25 +26,15 @@ def main():
     cfg = get_config(args.arch).reduced()
     if args.window:
         cfg = cfg.with_(sliding_window=args.window)
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = Engine(cfg, strategy="static", seed=0)
 
-    key = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, cfg, {"tokens": prompts},
-                            cache_len=args.prompt_len + args.gen)
-    first = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: batch={args.batch} len={args.prompt_len} "
-          f"({t_prefill:.2f}s)  cache k: {cache['k'].shape}")
-
-    t0 = time.perf_counter()
-    out, cache = greedy_generate(params, cfg, cache, first, args.gen)
-    t_dec = time.perf_counter() - t0
-    per_tok = t_dec / args.gen * 1e3
+    out, report = engine.serve(batch=args.batch,
+                               prompt_len=args.prompt_len,
+                               gen_tokens=args.gen)
+    print(f"prefill: batch={report['batch']} "
+          f"len={report['prompt_len']} ({report['prefill_s']:.2f}s)")
     print(f"decoded {args.gen} tokens x {args.batch} streams "
-          f"({per_tok:.1f} ms/token-step)")
+          f"({report['ms_per_token']:.1f} ms/token-step)")
     print("stream 0:", [int(t) for t in out[0][:16]])
 
 

@@ -1,0 +1,31 @@
+"""repro.api — the unified engine: one Session facade, pluggable
+Strategy backends, and a ClusterSpec that owns the device topology.
+
+Lifecycle (see docs/api.md):
+
+    cluster = ClusterSpec.auto(mem_budget=900.0)
+    engine  = Engine("internvl3-2b", cluster, strategy="dhp",
+                     reduced=True)
+    metrics = engine.train(steps=20, dataset="openvid", global_batch=12)
+    tokens, report = engine.serve(gen_tokens=16)
+
+Strategies are registry entries — `get_strategy("dhp")`,
+`get_strategy("static")`, `get_strategy("bruteforce")`,
+`get_strategy("oracle")` — so adding a parallelism policy is one class
+with a `@register_strategy` decorator, not a new driver.
+"""
+from .cluster import ClusterSpec
+from .engine import Engine, Session, StepMetrics, demo_cost_model
+from .strategies import (STRATEGY_REGISTRY, BruteForceStrategy,
+                         DHPStrategy, MeasuredCostModel, OracleStrategy,
+                         StaticStrategy, Strategy, available_strategies,
+                         get_strategy, register_strategy)
+
+__all__ = [
+    "ClusterSpec",
+    "Engine", "Session", "StepMetrics", "demo_cost_model",
+    "Strategy", "StaticStrategy", "DHPStrategy", "BruteForceStrategy",
+    "OracleStrategy", "MeasuredCostModel",
+    "STRATEGY_REGISTRY", "available_strategies", "get_strategy",
+    "register_strategy",
+]

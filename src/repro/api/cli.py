@@ -1,0 +1,95 @@
+"""`repro-train` — the Engine CLI (also `python -m repro.api.cli`).
+
+One loop, every strategy:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  repro-train --arch internvl3-2b --strategy dhp --steps 20 --reduced
+  repro-train --arch internvl3-2b --strategy static --steps 20 --reduced
+  repro-train --list-strategies
+"""
+from __future__ import annotations
+
+import argparse
+from typing import List, Optional
+
+from .cluster import ClusterSpec
+from .engine import Engine, StepMetrics
+from .strategies import available_strategies, get_strategy
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro-train",
+        description="Train via the unified Engine with a pluggable "
+                    "parallelism strategy.")
+    ap.add_argument("--arch", default="internvl3-2b")
+    ap.add_argument("--strategy", default=None,
+                    choices=available_strategies(),
+                    help="parallelism strategy (default: dhp; "
+                    "launch.train keeps its legacy static default)")
+    ap.add_argument("--mode", default=None,
+                    choices=available_strategies(),
+                    help="deprecated alias for --strategy")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="global batch (sequences per step)")
+    ap.add_argument("--seq-len", type=int, default=512,
+                    help="max tokens per sequence")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized model variant")
+    ap.add_argument("--dataset", default="openvid")
+    ap.add_argument("--mem-budget", type=float, default=1024.0,
+                    help="per-rank activation budget in tokens (demo)")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--list-strategies", action="store_true")
+    return ap
+
+
+def make_engine(args, default_strategy: str = "dhp") -> Engine:
+    """argparse namespace -> configured Engine (shared with the
+    deprecated launch.train shims)."""
+    from ..training.optimizer import AdamW, cosine_schedule
+
+    strategy = (getattr(args, "strategy", None)
+                or getattr(args, "mode", None) or default_strategy)
+    cluster = ClusterSpec.auto(mem_budget=args.mem_budget)
+    return Engine(
+        args.arch,
+        cluster,
+        strategy=get_strategy(strategy),
+        optimizer=AdamW(lr=cosine_schedule(args.lr, 10, args.steps)),
+        reduced=args.reduced,
+        seed=args.seed,
+    )
+
+
+def run(args, default_strategy: str = "dhp") -> List[StepMetrics]:
+    """Build an Engine from CLI args and train — the whole driver."""
+    engine = make_engine(args, default_strategy)
+    print(f"arch={engine.cfg.arch_id} strategy={engine.strategy.name} "
+          f"ranks={engine.cluster.n_replicas}")
+    history = engine.train(
+        steps=args.steps, dataset=args.dataset,
+        global_batch=args.batch, max_tokens=args.seq_len, log=print)
+    print("executable pool:", engine.executor.pool.stats)
+    if args.checkpoint:
+        engine.save_checkpoint(args.checkpoint)
+        print("saved", args.checkpoint)
+    engine.close()
+    return history
+
+
+def main(argv: Optional[List[str]] = None, *,
+         default_strategy: str = "dhp") -> None:
+    args = build_parser().parse_args(argv)
+    if args.list_strategies:
+        for name in available_strategies():
+            print(name)
+        return
+    run(args, default_strategy)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""ClusterSpec — the device-topology half of a Session.
+
+One object owns everything that is *per-cluster* rather than per-model:
+the flat device list, the static model (TP) axis width, the per-rank
+activation memory budget the planners schedule against, the bandwidth
+topology for Eq. 9, and the GroupPool of cached sub-meshes + compiled
+executables that every engine on this cluster shares.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+from ..core.cost_model import Hardware
+from ..core.group_pool import GroupPool
+
+
+@dataclasses.dataclass
+class ClusterSpec:
+    """Devices + model axis + GroupPool ownership.
+
+    `devices=None` resolves to `jax.devices()` on first use (kept lazy so
+    constructing a spec never initialises the jax backend — the dry-run
+    and tests depend on controlling XLA_FLAGS before first touch).
+
+    `mem_budget` is the per-rank activation budget E of Eq. 3. Its unit
+    matches the cost model's `m_token`: bytes for profiled/roofline
+    coefficients, plain tokens for the CPU-demo calibration.
+    """
+
+    devices: Optional[Sequence[Any]] = None
+    model_axis: int = 1
+    mem_budget: float = 1024.0
+    hardware: Hardware = dataclasses.field(default_factory=Hardware)
+    _pool: Optional[GroupPool] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- resolution -----------------------------------------------------
+    def resolved_devices(self) -> List[Any]:
+        if self.devices is None:
+            import jax
+            self.devices = list(jax.devices())
+        return list(self.devices)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.resolved_devices())
+
+    @property
+    def n_replicas(self) -> int:
+        """Number of CP-schedulable ranks (device count / model axis) —
+        the N the planners allocate over."""
+        return self.n_devices // self.model_axis
+
+    # -- owned resources ------------------------------------------------
+    def pool(self) -> GroupPool:
+        """The cluster's GroupPool (created once, shared by engines)."""
+        if self._pool is None:
+            self._pool = GroupPool(self.resolved_devices(),
+                                   self.model_axis)
+        return self._pool
+
+    def mesh(self):
+        """Full-cluster (data, model) demo mesh for static pjit paths."""
+        import jax
+        devs = self.resolved_devices()
+        return jax.make_mesh(
+            (self.n_replicas, self.model_axis), ("data", "model"),
+            devices=devs[:self.n_replicas * self.model_axis])
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def auto(cls, *, model_axis: int = 1,
+             mem_budget: float = 1024.0,
+             hardware: Optional[Hardware] = None) -> "ClusterSpec":
+        """Spec over every visible device (the common entry point)."""
+        return cls(devices=None, model_axis=model_axis,
+                   mem_budget=mem_budget,
+                   hardware=hardware or Hardware())

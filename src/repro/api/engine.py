@@ -1,0 +1,304 @@
+"""Engine / Session — the single public entry point of the repro.
+
+One facade owns the full lifecycle the paper's Fig. 3 describes:
+
+    ClusterSpec  ──►  Engine(model, cluster, strategy="dhp")
+                         │ plan(batch)    -> ExecutionPlan
+                         │ execute(plan)  -> StepMetrics
+                         │ train(loader)  -> [StepMetrics]  (async built in)
+                         │ serve(...)     -> decoded tokens
+                         ▼
+                      Strategy registry (static / dhp / bruteforce / oracle)
+
+`train()` is the one driver every launcher/example/benchmark shares: a
+producer-consumer loop that prepares the NEXT batch's plan on a host
+thread while devices execute the current one (paper §5 Implementation
+(2)), parameterized only by the strategy name.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterable, Iterator, List, Optional, Union
+
+from ..configs import get_config
+from ..configs.base import ModelConfig
+from ..core.cost_model import CostModel, SeqInfo, analytic_coeffs
+from ..core.executor import DHPExecutor
+from ..core.scheduler import ExecutionPlan
+from ..data.pipeline import HeterogeneousLoader, RaggedBatch
+from .cluster import ClusterSpec
+from .strategies import Strategy, get_strategy
+
+Batch = Union[RaggedBatch, List[SeqInfo]]
+
+
+@dataclasses.dataclass
+class StepMetrics:
+    """What one executed plan produced — the uniform result row every
+    driver prints and every benchmark aggregates."""
+
+    step: int
+    loss: float
+    tokens: int
+    step_time_s: float
+    strategy: str
+    schedule_ms: float
+    solver_ms: float
+    stage_ms: Dict[str, float]
+    degree_histogram: Dict[int, int]
+
+    def summary(self) -> str:
+        return (f"step {self.step:3d} loss={self.loss:.4f} "
+                f"degrees={self.degree_histogram} "
+                f"sched={self.schedule_ms:.1f}ms "
+                f"({self.step_time_s:.2f}s)")
+
+
+def demo_cost_model(cfg: ModelConfig) -> CostModel:
+    """The CPU-demo calibration every driver used to hand-roll: roofline
+    coefficients for the model shape, with memory accounting in plain
+    tokens (m_token=1, m_ms=0) so `mem_budget` reads as a per-rank token
+    budget."""
+    coeffs = dataclasses.replace(
+        analytic_coeffs(
+            hidden=cfg.d_model, n_layers=cfg.n_layers,
+            n_heads=max(cfg.n_heads, 1), kv_heads=max(cfg.kv_heads, 1),
+            ffn=max(cfg.d_ff, 1), vocab=cfg.vocab),
+        m_ms=0.0, m_token=1.0)
+    return CostModel(coeffs)
+
+
+class Engine:
+    """A training/serving session on one cluster with one swappable
+    parallelism strategy.
+
+    >>> eng = Engine("internvl3-2b", strategy="dhp", reduced=True)
+    >>> metrics = eng.train(steps=5, dataset="openvid", global_batch=8)
+
+    `model` is an arch id from the registry or a ModelConfig. VLM
+    configs are run in token-stream mode (vision tokens pre-counted in
+    the SeqInfo lengths, LM decoder executed) — the convention the DHP
+    loader/executor pair uses throughout.
+    """
+
+    def __init__(self, model: Union[str, ModelConfig],
+                 cluster: Optional[ClusterSpec] = None, *,
+                 strategy: Union[str, Strategy] = "dhp",
+                 optimizer: Optional[Any] = None,
+                 cost_model: Optional[CostModel] = None,
+                 reduced: bool = False,
+                 seed: int = 0):
+        cfg = get_config(model) if isinstance(model, str) else model
+        if reduced:
+            cfg = cfg.reduced()
+        if cfg.family == "vlm":
+            cfg = cfg.with_(family="dense", vlm=None)
+        self.cfg = cfg
+        self.cluster = cluster or ClusterSpec.auto()
+        self.cost_model = cost_model or demo_cost_model(cfg)
+        self.strategy = (get_strategy(strategy)
+                         if isinstance(strategy, str) else strategy)
+        self.strategy.bind(self.cost_model, self.cluster.n_replicas,
+                           self.cluster.mem_budget)
+        self.seed = seed
+        self._optimizer = optimizer
+        self._state = None
+        self._executor: Optional[DHPExecutor] = None
+        self._apply_update = None
+        self._step = 0
+
+    # -- lazy heavyweight pieces ----------------------------------------
+    @property
+    def executor(self) -> DHPExecutor:
+        if self._executor is None:
+            self._executor = DHPExecutor(self.cfg,
+                                         pool=self.cluster.pool())
+        return self._executor
+
+    @property
+    def optimizer(self):
+        if self._optimizer is None:
+            from ..training.optimizer import AdamW
+            self._optimizer = AdamW(lr=3e-4)
+        return self._optimizer
+
+    @property
+    def state(self):
+        if self._state is None:
+            self._state = self.init_state(self.seed)
+        return self._state
+
+    @state.setter
+    def state(self, value):
+        self._state = value
+
+    def init_state(self, seed: int = 0):
+        import jax
+        from ..models.model import init_params
+        from ..training.train_step import TrainState
+        params = init_params(jax.random.PRNGKey(seed), self.cfg)
+        return TrainState(params=params,
+                          opt=self.optimizer.init(params))
+
+    # -- plan -----------------------------------------------------------
+    def plan(self, batch: Batch) -> ExecutionPlan:
+        """Plan one global batch with the session's strategy."""
+        infos = batch.infos if isinstance(batch, RaggedBatch) else batch
+        return self.strategy.plan(infos)
+
+    # -- execute --------------------------------------------------------
+    def execute(self, plan: ExecutionPlan, data: RaggedBatch, *,
+                update: bool = True,
+                measure: Optional[bool] = None) -> StepMetrics:
+        """Run a plan on the cluster; optionally apply the optimizer
+        update. `measure` forces per-group timing capture (defaults to
+        whatever the strategy asks for — OracleStrategy wants it)."""
+        import jax
+
+        if measure is None:
+            measure = self.strategy.wants_measurement
+        timings: Optional[List[dict]] = [] if measure else None
+        t0 = time.perf_counter()
+        loss, grads = self.executor.run_plan(self.state.params, plan,
+                                             data, timings=timings)
+        if update:
+            if self._apply_update is None:
+                from ..training.train_step import TrainState
+                opt = self.optimizer
+
+                @jax.jit
+                def apply_update(state, grads):
+                    p, o = opt.update(grads, state.opt, state.params)
+                    return TrainState(p, o)
+
+                self._apply_update = apply_update
+            self.state = self._apply_update(self.state, grads)
+        step_time = time.perf_counter() - t0
+        if timings:
+            self.strategy.observe(plan, timings)
+        metrics = StepMetrics(
+            step=self._step,
+            loss=float(loss),
+            tokens=sum(g.tokens for mb in plan.micro_batches
+                       for g in mb.groups),
+            step_time_s=step_time,
+            strategy=plan.strategy_name or self.strategy.name,
+            schedule_ms=plan.schedule_ms,
+            solver_ms=plan.solver_ms,
+            stage_ms=dict(plan.stage_ms),
+            degree_histogram=plan.degree_histogram,
+        )
+        self._step += 1
+        return metrics
+
+    # -- train: THE loop ------------------------------------------------
+    def train(self, loader: Optional[Iterable[RaggedBatch]] = None, *,
+              steps: int = 10, dataset: str = "openvid",
+              global_batch: int = 8, max_tokens: int = 512,
+              tokens_per_frame: int = 16,
+              log=None) -> List[StepMetrics]:
+        """The single training driver: heterogeneous batches -> strategy
+        plan -> executor, with next-batch planning overlapped on a host
+        thread. Every strategy (static baselines included) runs through
+        this one loop."""
+        if loader is None:
+            loader = HeterogeneousLoader(
+                dataset, global_batch, self.cfg.vocab, seed=self.seed,
+                max_tokens=max_tokens, tokens_per_frame=tokens_per_frame)
+        it: Iterator[RaggedBatch] = iter(loader)
+
+        data = next(it)
+        self.strategy.prepare(data.infos)
+        history: List[StepMetrics] = []
+        for _ in range(steps):
+            plan = self.strategy.collect()
+            next_data = None
+            try:
+                next_data = next(it)
+                self.strategy.prepare(next_data.infos)  # overlap
+            except StopIteration:
+                pass
+            metrics = self.execute(plan, data)
+            history.append(metrics)
+            if log is not None:
+                log(metrics.summary())
+            if next_data is None:
+                break
+            data = next_data
+        return history
+
+    # -- serve ----------------------------------------------------------
+    def serve(self, prompts=None, *, batch: int = 8,
+              prompt_len: int = 96, gen_tokens: int = 32,
+              cache_len: Optional[int] = None):
+        """Batched prefill + greedy decode via serving/serve_step.
+
+        `prompts`: [B, S] int32 token ids (random ids drawn when None).
+        Attention families (dense/moe/vlm) prefill a KV cache;
+        ssm/recurrent/hybrid families start from a fresh state cache and
+        audio additionally prefills the encoder cross-KV from synthetic
+        frames — the same per-family routing the pre-API quickstart did.
+        Returns (decoded [B, gen_tokens] tokens, dict of timings)."""
+        import jax
+        import jax.numpy as jnp
+
+        from ..models.model import (init_cache, prefill,
+                                    prefill_cross_kv)
+        from ..serving.serve_step import greedy_generate
+
+        if prompts is None:
+            prompts = jax.random.randint(
+                jax.random.PRNGKey(self.seed + 1), (batch, prompt_len),
+                0, self.cfg.vocab)
+        prompts = jnp.asarray(prompts)
+        batch, prompt_len = prompts.shape
+        cache_len = cache_len or prompt_len + gen_tokens
+
+        t0 = time.perf_counter()
+        if self.cfg.family in ("dense", "moe", "vlm"):
+            logits, cache = prefill(self.state.params, self.cfg,
+                                    {"tokens": prompts},
+                                    cache_len=cache_len)
+            first = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        else:
+            cache = init_cache(self.cfg, batch, cache_len)
+            if self.cfg.family == "audio":
+                frames = jax.random.normal(
+                    jax.random.PRNGKey(self.seed + 2),
+                    (batch, self.cfg.encdec.n_audio_frames,
+                     self.cfg.d_model))
+                cache = prefill_cross_kv(self.state.params, self.cfg,
+                                         frames, cache)
+            first = prompts[:, -1].astype(jnp.int32)
+        t_prefill = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        out, cache = greedy_generate(self.state.params, self.cfg, cache,
+                                     first, gen_tokens)
+        t_decode = time.perf_counter() - t0
+        report = {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "ms_per_token": t_decode / max(gen_tokens, 1) * 1e3,
+            "batch": batch,
+            "prompt_len": prompt_len,
+        }
+        return out, report
+
+    # -- checkpointing ---------------------------------------------------
+    def save_checkpoint(self, path: str) -> None:
+        from ..training.checkpoint import save
+        save(path, self.state.params)
+
+    def load_checkpoint(self, path: str) -> None:
+        from ..training.checkpoint import restore
+        self.state = self.state._replace(
+            params=restore(path, self.state.params))
+
+    def close(self) -> None:
+        self.strategy.close()
+
+
+#: `Session` is the facade name from the API docs; `Engine` the original.
+Session = Engine

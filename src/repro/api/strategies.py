@@ -1,0 +1,332 @@
+"""Pluggable parallelism strategies — the plan() half of the Session.
+
+The paper's core claim is that the parallelism layout should be a
+*per-batch, swappable decision*. This module makes the swap a one-word
+registry lookup: every backend implements the same `Strategy` surface
+(`plan`, async `prepare`/`collect`, `observe`) and is registered under a
+name, so drivers, examples and benchmarks select layouts with
+`get_strategy("dhp" | "static" | "megatron" | "deepspeed" |
+"bruteforce" | "oracle")` instead of wiring scheduler classes by hand.
+
+Adding a new parallelism strategy is now one class + one
+`@register_strategy` line — no new driver.
+
+Strategies are constructed *unbound* (no cluster context) and attached
+to a cost model / rank count / memory budget via `bind(...)`, which the
+Engine does automatically from its ClusterSpec.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+from typing import Callable, Dict, List, Optional, Sequence as Seq, Tuple
+
+from ..core.allocator import allocate_bruteforce
+from ..core.cost_model import CostModel, SeqInfo
+from ..core.group_pool import pow2_bucket
+from ..core.scheduler import DHPScheduler, ExecutionPlan, static_plan
+
+# name -> (class, constructor defaults). Aliases ("megatron") are just
+# extra entries with different defaults.
+STRATEGY_REGISTRY: Dict[str, Tuple[type, dict]] = {}
+
+
+def register_strategy(name: str, **defaults):
+    """Class decorator registering a Strategy backend under `name`."""
+    def deco(cls):
+        STRATEGY_REGISTRY[name] = (cls, dict(defaults))
+        return cls
+    return deco
+
+
+def available_strategies() -> List[str]:
+    return sorted(STRATEGY_REGISTRY)
+
+
+def get_strategy(name: str, **options) -> "Strategy":
+    """Registry round-trip: name -> configured Strategy instance.
+
+    `options` override the registered defaults (e.g.
+    `get_strategy("static", degree=4)`)."""
+    if name not in STRATEGY_REGISTRY:
+        raise KeyError(
+            f"unknown strategy {name!r}; registered: "
+            f"{available_strategies()}")
+    cls, defaults = STRATEGY_REGISTRY[name]
+    strat = cls(**{**defaults, **options})
+    strat.name = name
+    return strat
+
+
+class Strategy:
+    """One parallelism policy: turns a batch of SeqInfo into an
+    ExecutionPlan the executor can run.
+
+    Subclasses implement `_plan`. The base class provides the uniform
+    async producer-consumer surface (`prepare` schedules the NEXT batch
+    on a host thread while devices crunch the current one — paper §5
+    Implementation (2)) and the `observe` hook fed with measured
+    per-group timings after execution.
+    """
+
+    name = "strategy"
+    #: engines pass per-group measured timings to observe() only when
+    #: this is True (measuring serialises group dispatch).
+    wants_measurement = False
+
+    def __init__(self, cost_model: Optional[CostModel] = None,
+                 n_ranks: Optional[int] = None,
+                 mem_budget: Optional[float] = None):
+        self.cm = cost_model
+        self.n_ranks = n_ranks
+        self.budget = mem_budget
+        self._executor: Optional[
+            concurrent.futures.ThreadPoolExecutor] = None
+        self._pending: Optional[concurrent.futures.Future] = None
+
+    # -- binding ---------------------------------------------------------
+    @property
+    def is_bound(self) -> bool:
+        return (self.cm is not None and self.n_ranks is not None
+                and self.budget is not None)
+
+    def bind(self, cost_model: CostModel, n_ranks: int,
+             mem_budget: float) -> "Strategy":
+        """Attach cluster context; fields already set (e.g. passed to the
+        constructor explicitly) win. Returns self for chaining."""
+        if self.cm is None:
+            self.cm = cost_model
+        if self.n_ranks is None:
+            self.n_ranks = n_ranks
+        if self.budget is None:
+            self.budget = mem_budget
+        self._rebind()
+        return self
+
+    def _rebind(self) -> None:
+        """Subclass hook: invalidate planner caches after bind()."""
+
+    def _require_bound(self) -> None:
+        if not self.is_bound:
+            raise RuntimeError(
+                f"strategy {self.name!r} is unbound — call "
+                f".bind(cost_model, n_ranks, mem_budget) or hand it to "
+                f"an Engine first")
+
+    # -- planning --------------------------------------------------------
+    def plan(self, seqs: Seq[SeqInfo]) -> ExecutionPlan:
+        self._require_bound()
+        plan = self._plan(list(seqs))
+        plan.strategy_name = self.name
+        return plan
+
+    def _plan(self, seqs: List[SeqInfo]) -> ExecutionPlan:
+        raise NotImplementedError
+
+    # -- async producer-consumer ----------------------------------------
+    def prepare(self, seqs: Seq[SeqInfo]) -> None:
+        """Kick off planning of the NEXT batch on the host thread."""
+        if self._executor is None:
+            self._executor = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1)
+        self._pending = self._executor.submit(self.plan, list(seqs))
+
+    def collect(self) -> ExecutionPlan:
+        """Block until the prepared plan is ready (usually already is)."""
+        if self._pending is None:
+            raise RuntimeError("collect() without a prior prepare()")
+        plan = self._pending.result()
+        self._pending = None
+        return plan
+
+    # -- feedback --------------------------------------------------------
+    def observe(self, plan: ExecutionPlan,
+                timings: List[dict]) -> None:
+        """Post-execution hook with measured per-group timings
+        ({seq_ids, degree, tokens, seconds, compiled} dicts). Default:
+        ignored; OracleStrategy learns its cost table from these."""
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown(wait=False)
+            self._executor = None
+
+
+# ---------------------------------------------------------------------------
+@register_strategy("static")
+@register_strategy("megatron", power_of_two=False)
+@register_strategy("deepspeed", power_of_two=True)
+class StaticStrategy(Strategy):
+    """Fixed-degree baseline (Megatron-LM / DeepSpeed style).
+
+    `degree=None` sizes the one global CP degree for the longest
+    sequence of each batch (how a practitioner must configure a static
+    system); `power_of_two=True` adds the Ulysses head-divisibility
+    rounding (§4.1)."""
+
+    def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
+                 degree: Optional[int] = None, power_of_two: bool = False):
+        super().__init__(cost_model, n_ranks, mem_budget)
+        self.degree = degree
+        self.power_of_two = power_of_two
+
+    def _plan(self, seqs):
+        return static_plan(seqs, self.cm, self.n_ranks, self.budget,
+                           degree=self.degree,
+                           power_of_two=self.power_of_two)
+
+
+@register_strategy("dhp")
+@register_strategy("dhp-faithful", balance_packing=False,
+                   serial_fallback=False)
+class DHPStrategy(Strategy):
+    """The paper's system: memory-aware BFD packing (Stage 1) + 2D-DP
+    resource assignment (Stage 2), re-planned every global batch."""
+
+    def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
+                 use_all_ranks: bool = True, balance_packing: bool = True,
+                 serial_fallback: bool = True,
+                 allocator: Optional[Callable] = None):
+        super().__init__(cost_model, n_ranks, mem_budget)
+        self.options = dict(use_all_ranks=use_all_ranks,
+                            balance_packing=balance_packing,
+                            serial_fallback=serial_fallback,
+                            allocator=allocator)
+        self._scheduler: Optional[DHPScheduler] = None
+
+    def _rebind(self):
+        self._scheduler = None
+
+    @property
+    def scheduler(self) -> DHPScheduler:
+        self._require_bound()
+        if self._scheduler is None:
+            self._scheduler = DHPScheduler(
+                self.cm, self.n_ranks, self.budget, **self.options)
+        return self._scheduler
+
+    def _plan(self, seqs):
+        return self.scheduler.schedule(seqs)
+
+
+@register_strategy("bruteforce")
+class BruteForceStrategy(DHPStrategy):
+    """DHP with the exact exhaustive Stage-2 solver instead of the 2D-DP
+    — the optimality oracle for the allocator (only tractable on small
+    waves; used by tests and regret analyses)."""
+
+    def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
+                 balance_packing: bool = True):
+        super().__init__(cost_model, n_ranks, mem_budget,
+                         balance_packing=balance_packing,
+                         serial_fallback=False,
+                         allocator=allocate_bruteforce)
+
+
+# ---------------------------------------------------------------------------
+class MeasuredCostModel(CostModel):
+    """Cost model backed by post-hoc measurements.
+
+    Keeps a running mean of measured group seconds keyed by
+    (pow2 token bucket, degree) — the same key space as the executable
+    pool, so every shape the executor has actually run has an entry —
+    plus a global measured/predicted calibration ratio that scales the
+    analytic estimate for shapes never measured."""
+
+    def __init__(self, base: CostModel):
+        super().__init__(base.coeffs, base.hw)
+        self._base = base
+        self._meas: Dict[Tuple[int, int], List[float]] = {}  # key -> [sum, n]
+        self._ratio_sum = 0.0
+        self._ratio_n = 0
+        # record() runs on the engine's main thread while the strategy's
+        # background planning thread reads group_time() concurrently
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def _key(tokens: int, degree: int) -> Tuple[int, int]:
+        return (pow2_bucket(int(tokens), 64), int(degree))
+
+    @property
+    def n_samples(self) -> int:
+        return int(sum(n for _, n in self._meas.values()))
+
+    def record(self, tokens: int, degree: int, seconds: float) -> None:
+        pred = self._base.group_time(
+            [SeqInfo(length=int(tokens))], int(degree))
+        key = self._key(tokens, degree)
+        with self._lock:
+            ent = self._meas.setdefault(key, [0.0, 0])
+            ent[0] += seconds
+            ent[1] += 1
+            if pred > 0:
+                self._ratio_sum += seconds / pred
+                self._ratio_n += 1
+
+    def group_time(self, seqs, degree):
+        if not seqs:
+            return 0.0
+        tokens = sum(s.length for s in seqs)
+        with self._lock:
+            ent = self._meas.get(self._key(tokens, degree))
+            if ent is not None:
+                return ent[0] / ent[1]
+            ratio = (self._ratio_sum / self._ratio_n
+                     if self._ratio_n else 1.0)
+        return self._base.group_time(seqs, degree) * ratio
+
+
+@register_strategy("oracle")
+class OracleStrategy(DHPStrategy):
+    """DHP planning against *measured* costs instead of the analytic
+    model — the hindsight planner for regret analysis.
+
+    Engines running this strategy execute in measuring mode; every
+    finished group feeds `observe()`, which updates a MeasuredCostModel
+    (compile-tainted first executions are skipped). Plans therefore
+    converge to what a scheduler with a perfect cost oracle would have
+    chosen; `plan_cost(plan, seqs)` evaluates ANY plan under the measured
+    costs, so `plan_cost(model_plan) - plan_cost(oracle_plan)` is the
+    cost-model regret."""
+
+    wants_measurement = True
+
+    def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
+                 use_all_ranks: bool = True, balance_packing: bool = True,
+                 serial_fallback: bool = True):
+        super().__init__(cost_model, n_ranks, mem_budget,
+                         use_all_ranks=use_all_ranks,
+                         balance_packing=balance_packing,
+                         serial_fallback=serial_fallback)
+
+    def bind(self, cost_model, n_ranks, mem_budget):
+        if self.cm is None and not isinstance(cost_model,
+                                              MeasuredCostModel):
+            self.cm = MeasuredCostModel(cost_model)
+        return super().bind(cost_model, n_ranks, mem_budget)
+
+    @property
+    def measured(self) -> MeasuredCostModel:
+        self._require_bound()
+        if not isinstance(self.cm, MeasuredCostModel):
+            self.cm = MeasuredCostModel(self.cm)
+            self._rebind()
+        return self.cm
+
+    def observe(self, plan, timings):
+        for t in timings:
+            if t.get("compiled"):
+                continue           # first run pays XLA compile, not step
+            self.measured.record(t["tokens"], t["degree"], t["seconds"])
+
+    def plan_cost(self, plan: ExecutionPlan,
+                  seqs: Seq[SeqInfo]) -> float:
+        """Evaluate an arbitrary plan under the measured cost table."""
+        by_id = {s.seq_id: s for s in seqs}
+        total = 0.0
+        for mb in plan.micro_batches:
+            total += max(
+                self.measured.group_time(
+                    [by_id[i] for i in g.seq_ids], g.degree)
+                for g in mb.groups)
+        return total

@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..data.pipeline import RaggedBatch, padded_batch
 from ..models.model import forward
+from ..parallel.compat import shard_map
 from ..training.optimizer import AdamW
 from .group_pool import GroupPool, pow2_bucket
 from .scheduler import ExecutionPlan
@@ -48,9 +49,17 @@ def _masked_nll(logits, labels, mask):
 
 class DHPExecutor:
     def __init__(self, cfg: ModelConfig, devices=None, *,
-                 model_axis: int = 1):
-        self.devices = devices if devices is not None else jax.devices()
-        self.pool = GroupPool(self.devices, model_axis)
+                 model_axis: int = 1, pool: Optional[GroupPool] = None):
+        """`pool` shares an externally owned GroupPool (e.g. the
+        ClusterSpec's) so meshes/executables are reused across engines;
+        by default the executor owns a fresh one over `devices`."""
+        if pool is not None:
+            self.pool = pool
+            self.devices = list(pool.devices.reshape(-1))
+        else:
+            self.devices = (devices if devices is not None
+                            else jax.devices())
+            self.pool = GroupPool(self.devices, model_axis)
         self.cfg_cp = cfg.with_(cp_axis="cp", scan_layers=True)
         self.cfg = cfg
 
@@ -75,7 +84,7 @@ class DHPExecutor:
 
             def loss_of(params, batch):
                 # params enter shard_map replicated (demo TP=1)
-                return jax.shard_map(
+                return shard_map(
                     shard_loss, mesh=mesh,
                     in_specs=(pspec, bspec), out_specs=P(),
                 )(params, batch)
@@ -90,10 +99,18 @@ class DHPExecutor:
         return self.pool.executable_for(key, build)
 
     # ------------------------------------------------------------------
-    def run_plan(self, params, plan: ExecutionPlan, data: RaggedBatch
+    def run_plan(self, params, plan: ExecutionPlan, data: RaggedBatch,
+                 *, timings: Optional[List[Dict[str, Any]]] = None
                  ) -> Tuple[jax.Array, Any]:
         """Execute every micro-batch of the plan; returns
-        (mean loss, token-weighted mean gradient) for the global batch."""
+        (mean loss, token-weighted mean gradient) for the global batch.
+
+        When `timings` (a caller-owned list) is passed, each group is
+        executed SYNCHRONOUSLY and a record {seq_ids, degree, tokens,
+        seconds, compiled} is appended per group — the measured-cost feed
+        for `repro.api.OracleStrategy`. This trades away the concurrent
+        dispatch of disjoint groups, so only enable it when measuring."""
+        import time as _time
         total_tokens = 0.0
         g_acc = None
         loss_acc = 0.0
@@ -101,15 +118,39 @@ class DHPExecutor:
             start = 0
             handles = []
             for g in mb.groups:
+                if start + g.degree > self.pool.n_replicas:
+                    # Defensive fallback for (custom) plans whose
+                    # micro-batch oversubscribes the rank budget
+                    # (Eq. 6): wrap the cursor so execution proceeds.
+                    # Numerics are unaffected, but wrapped groups share
+                    # devices with earlier ones and only same-slice
+                    # groups serialise — well-formed plans (all built-in
+                    # strategies) never take this branch.
+                    start = 0
                 seqs = [data.by_id(i) for i in g.seq_ids]
                 bucket = pow2_bucket(max(len(s) for s in seqs), 64)
                 bucket += (-bucket) % g.degree     # shardable over cp
                 np_batch = padded_batch(seqs, bucket)
+                misses = self.pool.stats.exe_misses
                 step = self._group_grad_fn(start, g.degree, len(seqs),
                                            bucket)
+                compiled = self.pool.stats.exe_misses > misses
                 batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
                 n_tok = float(np_batch["mask"].sum())
-                handles.append((step(params, batch), n_tok))  # async
+                if timings is None:
+                    handles.append((step(params, batch), n_tok))  # async
+                else:
+                    t0 = _time.perf_counter()
+                    out = jax.block_until_ready(step(params, batch))
+                    timings.append({
+                        "seq_ids": list(g.seq_ids),
+                        "degree": g.degree,
+                        "tokens": g.tokens,
+                        "bucket": bucket,
+                        "seconds": _time.perf_counter() - t0,
+                        "compiled": compiled,
+                    })
+                    handles.append((out, n_tok))
                 start += g.degree
             for (loss, grads), n_tok in handles:
                 w = n_tok

@@ -16,7 +16,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import time
-from typing import List, Optional, Sequence as Seq
+from typing import Callable, Dict, List, Optional, Sequence as Seq
 
 from .allocator import Allocation, allocate
 from .cost_model import CostModel, SeqInfo
@@ -46,6 +46,15 @@ class ExecutionPlan:
     total_time_est: float
     schedule_ms: float         # end-to-end scheduling latency (Table 1/2)
     solver_ms: float           # 2D-DP time alone (Table 1/2)
+    strategy_name: str = ""    # which registered strategy produced this
+    stage_ms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # per-stage scheduling latency, e.g. {"microbatch": .., "pack": ..,
+    # "allocate": ..} — lets benchmarks attribute plan cost per stage
+    # and per strategy from one code path.
+
+    @property
+    def n_groups(self) -> int:
+        return sum(len(mb.groups) for mb in self.micro_batches)
 
     @property
     def degree_histogram(self) -> dict:
@@ -120,18 +129,32 @@ class DHPScheduler:
         use_all_ranks: bool = True,
         balance_packing: bool = True,
         serial_fallback: bool = True,
+        allocator: Optional[Callable] = None,
     ):
         """`balance_packing` and `serial_fallback` are BEYOND-PAPER
         refinements (see EXPERIMENTS.md §Perf); disable both for the
-        paper-faithful scheduler."""
+        paper-faithful scheduler.
+
+        `allocator` swaps the Stage-2 solver (default: the 2D-DP
+        `allocate`; pass `allocate_bruteforce` for the exact oracle —
+        only tractable on small waves)."""
         self.cm = cost_model
         self.n_ranks = n_ranks
         self.budget = mem_budget
         self.use_all_ranks = use_all_ranks
         self.balance_packing = balance_packing
         self.serial_fallback = serial_fallback
+        self.allocator = allocator if allocator is not None else allocate
         self.planner = MicroBatchPlanner(cost_model, n_ranks, mem_budget)
-        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        import inspect
+        self._alloc_kwargs = (
+            {"use_all_ranks": use_all_ranks}
+            if "use_all_ranks" in inspect.signature(
+                self.allocator).parameters else {})
+        # legacy async surface (repro.api.Strategy carries its own
+        # producer-consumer thread); created lazily on first prepare()
+        # so the common schedule()-only path allocates no thread pool.
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
         self._pending: Optional[concurrent.futures.Future] = None
 
     # -- synchronous API ----------------------------------------------------
@@ -139,17 +162,26 @@ class DHPScheduler:
         t0 = time.perf_counter()
         micro_plans: List[MicroBatchPlan] = []
         solver_ms = 0.0
-        for mb in self.planner.plan(seqs):
+        micro_batches = self.planner.plan(seqs)
+        t_micro = time.perf_counter()
+        stage_ms = {"microbatch": (t_micro - t0) * 1e3,
+                    "pack": 0.0, "allocate": 0.0}
+        for mb in micro_batches:
+            t_pack = time.perf_counter()
             all_groups = pack_sequences(
                 mb, self.cm, self.budget, max_degree=self.n_ranks,
                 balance_over=self.n_ranks if self.balance_packing
                 else None)
+            stage_ms["pack"] += (time.perf_counter() - t_pack) * 1e3
             # BFD fragmentation can leave sum(d_min) > N for one wave;
             # partition atomic groups into sequential feasible waves.
             for groups in _feasible_waves(all_groups, self.n_ranks):
-                alloc: Allocation = allocate(
+                t_alloc = time.perf_counter()
+                alloc: Allocation = self.allocator(
                     groups, self.n_ranks, self.cm.group_time,
-                    use_all_ranks=self.use_all_ranks)
+                    **self._alloc_kwargs)
+                stage_ms["allocate"] += (
+                    time.perf_counter() - t_alloc) * 1e3
                 solver_ms += alloc.solver_ms
                 # BEYOND-PAPER: serial fallback. The DP runs the wave's
                 # groups CONCURRENTLY on disjoint rank sets (Eq. 2-6);
@@ -185,11 +217,16 @@ class DHPScheduler:
             total_time_est=sum(m.makespan for m in micro_plans),
             schedule_ms=schedule_ms,
             solver_ms=solver_ms,
+            strategy_name="dhp",
+            stage_ms=stage_ms,
         )
 
     # -- asynchronous producer-consumer API ----------------------------------
     def prepare(self, next_seqs: Seq[SeqInfo]) -> None:
         """Kick off scheduling of the NEXT batch on the host thread."""
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1)
         self._pending = self._pool.submit(self.schedule, list(next_seqs))
 
     def collect(self) -> ExecutionPlan:
@@ -198,6 +235,11 @@ class DHPScheduler:
         plan = self._pending.result()
         self._pending = None
         return plan
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
 
 
 def static_plan(
@@ -221,6 +263,13 @@ def static_plan(
     load-aware — this IS the pathology of Fig. 2). Each group chunks its
     share into memory-feasible micro-batches processed sequentially; the
     iteration time is the max over groups (synchronous gradient update).
+
+    The plan emits one MicroBatchPlan per *wave* (chunk j of every
+    lane), so each wave satisfies Eq. 6 (sum of degrees <= N) and the
+    executor's host sync between micro-batches gives the sequential
+    chunks their sequential semantics — per-rank memory stays within
+    budget. `total_time_est` is still max-over-lanes of the lane total
+    (DP lanes run independently; they do not barrier per chunk).
     """
     t0 = time.perf_counter()
     cm = cost_model
@@ -261,15 +310,21 @@ def static_plan(
             total += t
         return total, plans
 
-    gplans: List[GroupPlan] = []
+    lane_plans: List[List[GroupPlan]] = []
     lane_times = []
     for share in shares:
         t, plans = group_total(share)
         lane_times.append(t)
-        gplans.extend(plans)
+        lane_plans.append(plans)
     total = max(lane_times)
-    micro = [MicroBatchPlan(groups=gplans, makespan=total,
-                            ranks_used=n_groups * degree)]
+    micro = []
+    for wave in range(max(len(p) for p in lane_plans)):
+        groups = [p[wave] for p in lane_plans if wave < len(p)]
+        micro.append(MicroBatchPlan(
+            groups=groups,
+            makespan=max(g.est_time for g in groups),
+            ranks_used=len(groups) * degree))
     ms = (time.perf_counter() - t0) * 1e3
     return ExecutionPlan(micro_batches=micro, total_time_est=total,
-                         schedule_ms=ms, solver_ms=0.0)
+                         schedule_ms=ms, solver_ms=0.0,
+                         strategy_name="static", stage_ms={"plan": ms})

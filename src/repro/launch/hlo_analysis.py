@@ -111,7 +111,10 @@ def _dot_flops(instr: Instr, comp: Computation) -> float:
         return 0.0
     for d in dims_list[0][1]:
         out_elems *= d
-    m = re.match(r"\s*(%[\w.\-]+)", instr.rest)
+    # the lhs operand is the first %ref; depending on the XLA version the
+    # HLO text prints operands with ("f32[8,8]{1,0} %Arg_0.1") or without
+    # a type prefix, so search rather than anchor at the start.
+    m = re.search(r"(%[\w.\-]+)", instr.rest)
     contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
     if not m or not contract:
         return 0.0

@@ -1,143 +1,61 @@
-"""End-to-end training driver.
+"""End-to-end training launcher — thin wrapper over the unified
+`repro.api` Engine.
 
-Two modes:
-  * `--mode static`  — plain pjit data-parallel training on the demo
-    mesh (the Megatron/DeepSpeed-style baseline).
-  * `--mode dhp`     — the paper's system: heterogeneous batches from a
-    video-length distribution, the DHP scheduler planning every global
-    batch (async, producer-consumer), the executor running CP groups
-    with Ring Attention, group/executable pooling.
+There is ONE driver loop (`Engine.train`): heterogeneous batches from a
+video-length distribution, the selected Strategy planning every global
+batch on a background host thread (async producer-consumer, paper §5.2),
+and the executor dispatching CP groups with Ring Attention from the
+cluster's group/executable pool. `--mode` (alias `--strategy`) selects
+the parallelism policy from the registry:
+
+  * `static` / `megatron` / `deepspeed` — fixed-degree baselines;
+  * `dhp` / `dhp-faithful`              — the paper's dynamic system;
+  * `bruteforce`                        — exact Stage-2 solver (tiny runs);
+  * `oracle`                            — plans with measured costs.
 
 CPU demo (run with multiple host devices):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
   PYTHONPATH=src python -m repro.launch.train --arch internvl3-2b \\
       --mode dhp --steps 20 --reduced
+
+The old `run_static` / `run_dhp` entry points remain as deprecated shims
+that route through the same Engine loop.
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from ..api.cli import build_parser, run  # noqa: F401  (re-export)
+from ..api.cli import main as _api_main
 
-from ..configs import INPUT_SHAPES, get_config
-from ..core import (CostModel, DHPScheduler, Profiler, analytic_coeffs)
-from ..core.executor import DHPExecutor
-from ..data.pipeline import HeterogeneousLoader, synthetic_batch
-from ..models.model import init_params
-from ..training.checkpoint import save
-from ..training.optimizer import AdamW, cosine_schedule
-from ..training.train_step import TrainState, make_train_step
-from .mesh import make_demo_mesh
+
+def main(argv=None):
+    """Legacy launcher entry: keeps the pre-API default of `--mode
+    static` (the `repro-train` CLI defaults to dhp)."""
+    _api_main(argv, default_strategy="static")
+
+
+def _run_with_strategy(args, strategy: str):
+    args.strategy = strategy
+    if not hasattr(args, "mode"):
+        args.mode = strategy
+    return [m.loss for m in run(args)]
 
 
 def run_static(args):
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    mesh = make_demo_mesh()
-    opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
-    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=0)
-
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    state = TrainState(params=params, opt=opt.init(params))
-    shape = dataclasses.replace(INPUT_SHAPES["train_4k"],
-                                seq_len=args.seq_len,
-                                global_batch=args.batch)
-    losses = []
-    for i in range(args.steps):
-        np_batch = synthetic_batch(cfg, shape, seed=args.seed + i)
-        batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
-        t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        print(f"step {i:3d} loss={loss:.4f} "
-              f"({time.perf_counter() - t0:.2f}s)")
-    if args.checkpoint:
-        save(args.checkpoint, state.params)
-        print("saved", args.checkpoint)
-    return losses
+    """Deprecated: use `repro.api.Engine(strategy='static').train()`."""
+    warnings.warn(
+        "run_static is deprecated; use repro.api.Engine with "
+        "strategy='static'", DeprecationWarning, stacklevel=2)
+    return _run_with_strategy(args, "static")
 
 
 def run_dhp(args):
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if cfg.family == "vlm":
-        # the loader feeds token streams (vision tokens already counted
-        # in the SeqInfo lengths); run the LM decoder — same convention
-        # as examples/dhp_training.py
-        cfg = cfg.with_(family="dense", vlm=None)
-    n_ranks = len(jax.devices())
-    opt = AdamW(lr=cosine_schedule(args.lr, 10, args.steps))
-
-    coeffs = analytic_coeffs(
-        hidden=cfg.d_model, n_layers=cfg.n_layers,
-        n_heads=max(cfg.n_heads, 1), kv_heads=max(cfg.kv_heads, 1),
-        ffn=max(cfg.d_ff, 1), vocab=cfg.vocab)
-    # memory pressure knob for the demo: budget in tokens-equivalents
-    coeffs = dataclasses.replace(coeffs, m_ms=0.0, m_token=1.0)
-    cm = CostModel(coeffs)
-    sched = DHPScheduler(cm, n_ranks, mem_budget=args.mem_budget)
-    ex = DHPExecutor(cfg)
-
-    params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    state = TrainState(params=params, opt=opt.init(params))
-    loader = iter(HeterogeneousLoader(
-        args.dataset, args.batch, cfg.vocab, seed=args.seed,
-        max_tokens=args.seq_len, tokens_per_frame=16))
-
-    @jax.jit
-    def apply_update(state, grads):
-        p, o = opt.update(grads, state.opt, state.params)
-        return TrainState(p, o)
-
-    data = next(loader)
-    sched.prepare(data.infos)          # async scheduling (paper §5.2)
-    losses = []
-    for i in range(args.steps):
-        plan = sched.collect()
-        next_data = next(loader)
-        sched.prepare(next_data.infos)  # overlap next plan with compute
-        t0 = time.perf_counter()
-        loss, grads = ex.run_plan(state.params, plan, data)
-        state = apply_update(state, grads)
-        losses.append(float(loss))
-        print(f"step {i:3d} loss={float(loss):.4f} "
-              f"groups={plan.degree_histogram} "
-              f"sched={plan.schedule_ms:.0f}ms "
-              f"({time.perf_counter() - t0:.2f}s)")
-        data = next_data
-    print("executable pool:", ex.pool.stats)
-    if args.checkpoint:
-        save(args.checkpoint, state.params)
-    return losses
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internvl3-2b")
-    ap.add_argument("--mode", choices=("static", "dhp"), default="static")
-    ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=512)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--dataset", default="openvid")
-    ap.add_argument("--mem-budget", type=float, default=1024.0,
-                    help="per-rank activation budget in tokens (demo)")
-    ap.add_argument("--checkpoint", default=None)
-    args = ap.parse_args()
-    if args.mode == "static":
-        run_static(args)
-    else:
-        run_dhp(args)
+    """Deprecated: use `repro.api.Engine(strategy='dhp').train()`."""
+    warnings.warn(
+        "run_dhp is deprecated; use repro.api.Engine with "
+        "strategy='dhp'", DeprecationWarning, stacklevel=2)
+    return _run_with_strategy(args, "dhp")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""Version compatibility for the jax parallelism API.
+
+`shard_map` graduated from `jax.experimental.shard_map` to top-level
+`jax.shard_map` (jax >= 0.6); this repo supports both so the executor
+and ring-attention tests run on whichever the container ships.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _resolve_shard_map():
+    try:
+        return jax.shard_map
+    except AttributeError:
+        from jax.experimental.shard_map import shard_map
+        return shard_map
+
+
+shard_map = _resolve_shard_map()
+
+
+def axis_size(axis_name) -> int:
+    """`jax.lax.axis_size` (jax >= 0.5) with a fallback for older jax:
+    psum of the constant 1 over a named axis is folded to the axis size
+    without touching devices, so it stays a Python int for ring loops."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:
+        return int(jax.lax.psum(1, axis_name))
+
+
+__all__ = ["axis_size", "shard_map"]
+

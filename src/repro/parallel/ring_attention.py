@@ -24,6 +24,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import compat
+
 NEG_INF = -1e30
 
 
@@ -78,7 +80,7 @@ def ring_attention(q, k, v, q_pos, *, axis_name: str,
     power-of-two or head-divisibility constraint (the paper's core
     flexibility argument, §4.1).
     """
-    d = jax.lax.axis_size(axis_name)
+    d = compat.axis_size(axis_name)
     B, S, H, Dh = q.shape
     Hkv = k.shape[2]
     G = H // Hkv

@@ -1,0 +1,140 @@
+"""Compatibility layer for `hypothesis` property tests.
+
+When the real `hypothesis` package is installed (the `[test]` extra in
+pyproject.toml) this module re-exports it unchanged. When it is not —
+the bare container only ships pytest — a minimal deterministic sampler
+stands in: `@given` draws `max_examples` pseudo-random examples from the
+same strategy surface the tests use (`integers`, `floats`, `lists`,
+`sampled_from`, plus `.map`), seeded per-test so failures reproduce.
+
+This keeps tier-1 runnable without the dependency while losing only
+hypothesis' shrinking and coverage-guided generation, not the checks
+themselves.
+"""
+from __future__ import annotations
+
+try:                                    # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies  # noqa: F401
+    from hypothesis import strategies as st             # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+    _MAX_EXAMPLES_CAP = 100
+
+    class _Strategy:
+        """Base: something `.example(rng)` can draw from."""
+
+        def example(self, rng: random.Random):
+            raise NotImplementedError
+
+        def map(self, fn):
+            return _Mapped(self, fn)
+
+    class _Mapped(_Strategy):
+        def __init__(self, inner, fn):
+            self.inner, self.fn = inner, fn
+
+        def example(self, rng):
+            return self.fn(self.inner.example(rng))
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            # bias toward the bounds — the cases hypothesis finds first
+            r = rng.random()
+            if r < 0.08:
+                return self.lo
+            if r < 0.16:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            r = rng.random()
+            if r < 0.08:
+                return self.lo
+            if r < 0.16:
+                return self.hi
+            return rng.uniform(self.lo, self.hi)
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def example(self, rng):
+            return rng.choice(self.options)
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=10):
+            self.elem = elem
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 10
+
+        def example(self, rng):
+            n = rng.randint(self.min_size, self.max_size)
+            return [self.elem.example(rng) for _ in range(n)]
+
+    class _StrategiesModule:
+        """Duck-typed stand-in for `hypothesis.strategies`."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=None):
+            return _Lists(elements, min_size, max_size)
+
+    strategies = st = _StrategiesModule()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None,
+                 **_ignored):
+        """Records `max_examples` on the (already @given-wrapped) test."""
+        def deco(fn):
+            fn._compat_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+            return fn
+        return deco
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = random.Random(seed)
+                for i in range(n):
+                    drawn = [s.example(rng) for s in strats]
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:   # noqa: BLE001
+                        raise AssertionError(
+                            f"falsifying example #{i} "
+                            f"(seed={seed}): {drawn!r}") from e
+            # pytest resolves fixtures from inspect.signature(), which
+            # follows __wrapped__ back to the strategy-parameterised
+            # original — drop it so the test collects as zero-arg.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

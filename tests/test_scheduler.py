@@ -4,7 +4,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CostCoeffs, CostModel, DHPScheduler, Hardware,
                         SeqInfo, allocate, allocate_bruteforce,
