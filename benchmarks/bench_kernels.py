@@ -17,6 +17,75 @@ def _time(f, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _packed_lens():
+    # a heterogeneous atomic group: 6 sequences, 488 real tokens
+    return [180, 37, 121, 64, 9, 77]
+
+
+def run_packed(report):
+    """Packed-varlen flash attention vs the per-sequence padded
+    equivalent — the kernel-level view of the executor's packed path.
+    Reports padding_efficiency so the benchmark JSON tracks it."""
+    import numpy as np
+    from repro.kernels.ops import flash_attention, flash_attention_packed
+
+    key = jax.random.PRNGKey(0)
+    lens = _packed_lens()
+    bucket = 512                      # mult256 bucket of 488 real tokens
+    real = sum(lens)
+    seg = np.full(bucket, -1, np.int32)
+    off = 0
+    for i, L in enumerate(lens):
+        seg[off:off + L] = i
+        off += L
+    B, H, Hkv, D = 1, 4, 2, 64
+    q = jax.random.normal(key, (B, bucket, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, bucket, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, bucket, Hkv, D))
+    segj = jnp.asarray(seg)[None]
+
+    t_packed = _time(lambda q, k, v: flash_attention_packed(
+        q, k, v, segj, mode="causal"), q, k, v)
+    report("kernels/attn_pallas_packed_512", t_packed,
+           f"6 segments in one buffer, "
+           f"padding_efficiency={real / bucket:.3f}")
+
+    # per-sequence pow2-padded alternative: one call per sequence shape
+    pow2 = [max(64, 1 << (L - 1).bit_length()) for L in lens]
+    padded = sum(pow2)
+
+    def per_seq(q, k, v):
+        outs = []
+        o = 0
+        for L, b in zip(lens, pow2):
+            qs = jnp.pad(q[:, o:o + L], ((0, 0), (0, b - L), (0, 0),
+                                         (0, 0)))
+            ks = jnp.pad(k[:, o:o + L], ((0, 0), (0, b - L), (0, 0),
+                                         (0, 0)))
+            vs = jnp.pad(v[:, o:o + L], ((0, 0), (0, b - L), (0, 0),
+                                         (0, 0)))
+            outs.append(flash_attention(qs, ks, vs, mode="causal"))
+            o += L
+        # one array depending on EVERY call, so block_until_ready in
+        # _time waits for all 6 dispatches, not just the last
+        return jnp.stack([x.sum() for x in outs])
+
+    t_seq = _time(per_seq, q, k, v)
+    report("kernels/attn_pallas_perseq_512", t_seq,
+           f"same tokens, {len(lens)} pow2-padded calls, "
+           f"padding_efficiency={real / padded:.3f}")
+    report("kernels/packed_padding_efficiency", real / bucket * 100,
+           f"vs per-seq {real / padded:.3f} "
+           f"(value = percent, overhead x{(padded - real) / max(bucket - real, 1):.1f} less)")
+
+
+def run_smoke(report):
+    """CI subset: the packed-vs-padded kernel comparison only."""
+    run_packed(report)
+
+
 def run(report):
     from repro.kernels.ops import flash_attention
     from repro.models.attention import attn_chunked, attn_reference
@@ -59,3 +128,5 @@ def run(report):
     report("kernels/ssd_jnp_512", t_j, "chunked dual form, per-head map")
     t_sp = _time(fwd("pallas"), xs)
     report("kernels/ssd_pallas_interp_512", t_sp, "interpret mode")
+
+    run_packed(report)

@@ -23,20 +23,29 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI subset: per-strategy end-to-end table")
+                    help="fast CI subset: per-strategy end-to-end table "
+                         "+ packed-execution metrics")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write every row to PATH as JSON — the CI "
+                         "artifact that tracks padding_efficiency / "
+                         "exe_misses across PRs")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     failed = []
+    rows = []
 
     def report(name: str, us: float, derived: str = "") -> None:
         print(f"{name},{us:.1f},{derived}")
+        rows.append({"name": name, "value": us, "derived": derived})
         sys.stdout.flush()
 
     if args.smoke:
-        from . import bench_end_to_end
+        from . import bench_end_to_end, bench_kernels
         mods = [("end_to_end[smoke]",
-                 lambda r: bench_end_to_end.run_smoke(r))]
+                 lambda r: bench_end_to_end.run_smoke(r)),
+                ("kernels[smoke]",
+                 lambda r: bench_kernels.run_smoke(r))]
     else:
         from . import (bench_ablation, bench_case_study,
                        bench_end_to_end, bench_estimator, bench_kernels,
@@ -55,6 +64,10 @@ def main() -> None:
         except Exception:   # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "failed": failed}, f, indent=1)
     if failed:
         raise SystemExit(f"benchmarks failed: {failed}")
 

@@ -26,12 +26,20 @@ class ClusterSpec:
     `mem_budget` is the per-rank activation budget E of Eq. 3. Its unit
     matches the cost model's `m_token`: bytes for profiled/roofline
     coefficients, plain tokens for the CPU-demo calibration.
+
+    `bucketing` picks the GroupPool's padding-bucket ladder
+    ("pow2" | "geometric" | "mult256", or a callable n -> bucket):
+    fewer rungs = fewer XLA compilations, more rungs = less padding
+    waste. `max_executables` LRU-caps the pool's compiled-executable
+    cache so long heterogeneous runs can't grow host memory unboundedly.
     """
 
     devices: Optional[Sequence[Any]] = None
     model_axis: int = 1
     mem_budget: float = 1024.0
     hardware: Hardware = dataclasses.field(default_factory=Hardware)
+    bucketing: Any = "pow2"
+    max_executables: Optional[int] = None
     _pool: Optional[GroupPool] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -57,7 +65,9 @@ class ClusterSpec:
         """The cluster's GroupPool (created once, shared by engines)."""
         if self._pool is None:
             self._pool = GroupPool(self.resolved_devices(),
-                                   self.model_axis)
+                                   self.model_axis,
+                                   bucket_fn=self.bucketing,
+                                   max_executables=self.max_executables)
         return self._pool
 
     def mesh(self):
@@ -72,8 +82,12 @@ class ClusterSpec:
     @classmethod
     def auto(cls, *, model_axis: int = 1,
              mem_budget: float = 1024.0,
-             hardware: Optional[Hardware] = None) -> "ClusterSpec":
+             hardware: Optional[Hardware] = None,
+             bucketing: Any = "pow2",
+             max_executables: Optional[int] = None) -> "ClusterSpec":
         """Spec over every visible device (the common entry point)."""
         return cls(devices=None, model_axis=model_axis,
                    mem_budget=mem_budget,
-                   hardware=hardware or Hardware())
+                   hardware=hardware or Hardware(),
+                   bucketing=bucketing,
+                   max_executables=max_executables)

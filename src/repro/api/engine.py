@@ -47,6 +47,10 @@ class StepMetrics:
     solver_ms: float
     stage_ms: Dict[str, float]
     degree_histogram: Dict[int, int]
+    #: real/padded token ratio of the executed step (1.0 = no padding)
+    padding_efficiency: float = 1.0
+    #: executables compiled during this step (0 once the pool is warm)
+    exe_misses: int = 0
 
     def summary(self) -> str:
         return (f"step {self.step:3d} loss={self.loss:.4f} "
@@ -88,13 +92,17 @@ class Engine:
                  optimizer: Optional[Any] = None,
                  cost_model: Optional[CostModel] = None,
                  reduced: bool = False,
+                 packed: Optional[bool] = None,
                  seed: int = 0):
+        """`packed` forwards to DHPExecutor: the packed varlen execution
+        path (default: on for attention families)."""
         cfg = get_config(model) if isinstance(model, str) else model
         if reduced:
             cfg = cfg.reduced()
         if cfg.family == "vlm":
             cfg = cfg.with_(family="dense", vlm=None)
         self.cfg = cfg
+        self._packed = packed
         self.cluster = cluster or ClusterSpec.auto()
         self.cost_model = cost_model or demo_cost_model(cfg)
         self.strategy = (get_strategy(strategy)
@@ -113,7 +121,8 @@ class Engine:
     def executor(self) -> DHPExecutor:
         if self._executor is None:
             self._executor = DHPExecutor(self.cfg,
-                                         pool=self.cluster.pool())
+                                         pool=self.cluster.pool(),
+                                         packed=self._packed)
         return self._executor
 
     @property
@@ -188,6 +197,9 @@ class Engine:
             solver_ms=plan.solver_ms,
             stage_ms=dict(plan.stage_ms),
             degree_histogram=plan.degree_histogram,
+            padding_efficiency=self.executor.last_run_stats.get(
+                "padding_efficiency", 1.0),
+            exe_misses=self.executor.last_run_stats.get("exe_misses", 0),
         )
         self._step += 1
         return metrics

@@ -12,7 +12,10 @@ from .allocator import Allocation, allocate, allocate_bruteforce
 from .cost_model import (CostCoeffs, CostModel, Hardware, SeqInfo,
                          analytic_coeffs)
 from .distributions import DATASETS, sample_batch
-from .packing import AtomicGroup, pack_sequences, validate_packing
+from .group_pool import (BUCKET_LADDERS, GroupPool, make_bucket_fn,
+                         pow2_bucket)
+from .packing import (AtomicGroup, flatten_group, pack_sequences,
+                      packing_efficiency, validate_packing)
 from .profiler import Profiler, profiling_grid
 from .scheduler import (DHPScheduler, ExecutionPlan, GroupPlan,
                         MicroBatchPlan, MicroBatchPlanner, static_plan)
@@ -23,6 +26,8 @@ __all__ = [
     "CostCoeffs", "CostModel", "Hardware", "SeqInfo", "analytic_coeffs",
     "DATASETS", "sample_batch",
     "AtomicGroup", "pack_sequences", "validate_packing",
+    "flatten_group", "packing_efficiency",
+    "BUCKET_LADDERS", "GroupPool", "make_bucket_fn", "pow2_bucket",
     "Profiler", "profiling_grid",
     "DHPScheduler", "ExecutionPlan", "GroupPlan", "MicroBatchPlan",
     "MicroBatchPlanner", "static_plan",

@@ -1,18 +1,43 @@
 """DHP Executor — runs an ExecutionPlan on real devices (§5 workflow (4)).
 
 For each planned CP group the executor:
-  1. takes the group's sequences, pads them to a pooled bucket length
+  1. flattens the group's sequences into ONE packed token buffer
+     (`core/packing.flatten_group`): tokens concatenated, positions
+     reset per segment, a segment-id table making attention
+     block-diagonal, padding only at the TAIL to a pooled bucket
      (multiple of the CP degree so the sequence axis shards),
   2. fetches the group's sub-mesh from the GroupPool (the HCCL-pool
      analogue) and the compiled step from the executable pool,
-  3. dispatches a shard_map'd forward/backward with Ring-CP attention
-     over the `cp` axis.
+  3. dispatches a shard_map'd forward/backward with segment-aware
+     Ring-CP attention over the `cp` axis.
+
+The packed path is the load-bearing perf fix (MegaScale-Omni /
+Cornstarch's varlen lesson applied to this repo): the per-sequence path
+pads every sequence of a group to a pow2 bucket (worst case ~2x wasted
+FLOPs on the a1(1+eta)|s|^2 term the cost model optimizes) and keys
+executables on ("grad", start, degree, n_seqs, bucket) — the compilation
+count grows with the product of group shapes seen. Packing collapses the
+key to ("pgrad", start, degree, packed_bucket): n_seqs and the
+per-sequence bucket disappear from the compilation space entirely.
+(`start` must stay: a shard_map executable closes over its sub-mesh's
+physical devices, so groups on different replica slices cannot share a
+compiled artifact.) Set `packed=False` for the legacy per-sequence path.
+
+Trade-off to know: block-diagonal attention only SKIPS cross-segment
+work in the Pallas kernel (pl.when drops dead tiles). The portable
+chunked and ring-CP paths this CPU demo compiles compute the full
+(sum|s|)^2 score matrix and mask it — up to ~n_seqs x more attention
+FLOPs than per-sequence, traded against the padding waste, the smaller
+non-attention token count, and the collapsed executable space. On the
+TPU target (attn_impl="pallas") the skip is real and packing wins
+outright; bench_end_to_end.run_packed reports both step_time and
+padding so the trade stays visible.
 
 Groups on disjoint device subsets are dispatched WITHOUT blocking — JAX's
 async dispatch executes them concurrently, which is exactly the paper's
 concurrent heterogeneous CP groups. Token-count-weighted gradient
 averaging across groups reproduces the static single-group gradient
-bit-for-bit in expectation (invariant tested in tests/test_executor.py):
+bit-for-bit in expectation (invariant tested in tests/test_parallel.py):
 dynamic regrouping changes WHERE sequences run, never the math.
 
 This module targets the CPU multi-device demo (model_axis=1, params
@@ -35,8 +60,14 @@ from ..data.pipeline import RaggedBatch, padded_batch
 from ..models.model import forward
 from ..parallel.compat import shard_map
 from ..training.optimizer import AdamW
-from .group_pool import GroupPool, pow2_bucket
+from .group_pool import GroupPool
+from .packing import flatten_group
 from .scheduler import ExecutionPlan
+
+#: families whose attention layers support block-diagonal segment masks;
+#: recurrent state (ssm/hybrid) crosses segment boundaries, and
+#: vlm/audio batches carry extra modal inputs the flattener doesn't pack.
+PACKABLE_FAMILIES = ("dense", "moe")
 
 
 def _masked_nll(logits, labels, mask):
@@ -49,10 +80,14 @@ def _masked_nll(logits, labels, mask):
 
 class DHPExecutor:
     def __init__(self, cfg: ModelConfig, devices=None, *,
-                 model_axis: int = 1, pool: Optional[GroupPool] = None):
+                 model_axis: int = 1, pool: Optional[GroupPool] = None,
+                 packed: Optional[bool] = None):
         """`pool` shares an externally owned GroupPool (e.g. the
         ClusterSpec's) so meshes/executables are reused across engines;
-        by default the executor owns a fresh one over `devices`."""
+        by default the executor owns a fresh one over `devices`.
+
+        `packed` selects the packed varlen execution path (default: on
+        for families in PACKABLE_FAMILIES, off otherwise)."""
         if pool is not None:
             self.pool = pool
             self.devices = list(pool.devices.reshape(-1))
@@ -62,18 +97,27 @@ class DHPExecutor:
             self.pool = GroupPool(self.devices, model_axis)
         self.cfg_cp = cfg.with_(cp_axis="cp", scan_layers=True)
         self.cfg = cfg
+        if packed is None:
+            packed = cfg.family in PACKABLE_FAMILIES
+        if packed and cfg.family not in PACKABLE_FAMILIES:
+            raise ValueError(
+                f"packed execution unsupported for family {cfg.family!r}"
+                f" (needs segment-maskable attention + token-only batch)")
+        self.packed = packed
+        #: padding/compile telemetry of the most recent run_plan()
+        self.last_run_stats: Dict[str, float] = {}
 
     # ------------------------------------------------------------------
-    def _group_grad_fn(self, start: int, degree: int, n_seqs: int,
-                       bucket: int):
-        """Compiled (loss, grads, token_count) for one CP group shape."""
-        mesh = self.pool.mesh_for(start, degree)
+    def _build_grad_fn(self, mesh):
+        """(loss, grads) step over a sub-mesh; batch seq-axis sharded."""
         cfg = self.cfg_cp
 
         def build():
             pspec = P()     # params replicated on the sub-mesh (demo TP=1)
-            bspec = {k: P(None, "cp") for k in
-                     ("tokens", "labels", "mask", "positions")}
+            keys = ("tokens", "labels", "mask", "positions")
+            if self.packed:
+                keys = keys + ("segment_ids",)
+            bspec = {k: P(None, "cp") for k in keys}
 
             def shard_loss(params, batch):
                 logits, aux = forward(params, cfg, batch)
@@ -95,8 +139,38 @@ class DHPExecutor:
 
             return jax.jit(fwd_bwd)
 
+        return build
+
+    def _group_grad_fn(self, start: int, degree: int, n_seqs: int,
+                       bucket: int) -> Tuple[Any, bool]:
+        """Per-sequence-padded step for one CP group shape (legacy path:
+        the executable key still depends on n_seqs)."""
+        mesh = self.pool.mesh_for(start, degree)
         key = ("grad", start, degree, n_seqs, bucket)
-        return self.pool.executable_for(key, build)
+        return self.pool.executable_for(key, self._build_grad_fn(mesh))
+
+    def _packed_grad_fn(self, start: int, degree: int,
+                        bucket: int) -> Tuple[Any, bool]:
+        """Packed varlen step: ONE [1, bucket] buffer regardless of how
+        many sequences the group holds — n_seqs is gone from the key."""
+        mesh = self.pool.mesh_for(start, degree)
+        key = ("pgrad", start, degree, bucket)
+        return self.pool.executable_for(key, self._build_grad_fn(mesh))
+
+    # ------------------------------------------------------------------
+    def _group_batch(self, seqs, degree: int):
+        """(np_batch, real_tokens, padded_tokens, bucket) for one group."""
+        if self.packed:
+            total = sum(len(s) for s in seqs)
+            bucket = self.pool.bucket(total)
+            bucket += (-bucket) % degree       # shardable over cp
+            np_batch, cu = flatten_group(seqs, bucket)
+            return np_batch, int(cu[-1]), bucket, bucket
+        bucket = self.pool.bucket(max(len(s) for s in seqs))
+        bucket += (-bucket) % degree           # shardable over cp
+        np_batch = padded_batch(seqs, bucket)
+        real = sum(min(len(s), bucket) for s in seqs)
+        return np_batch, real, len(seqs) * bucket, bucket
 
     # ------------------------------------------------------------------
     def run_plan(self, params, plan: ExecutionPlan, data: RaggedBatch,
@@ -107,13 +181,22 @@ class DHPExecutor:
 
         When `timings` (a caller-owned list) is passed, each group is
         executed SYNCHRONOUSLY and a record {seq_ids, degree, tokens,
-        seconds, compiled} is appended per group — the measured-cost feed
-        for `repro.api.OracleStrategy`. This trades away the concurrent
-        dispatch of disjoint groups, so only enable it when measuring."""
+        bucket, seconds, compiled, real_tokens, padded_tokens,
+        padding_efficiency} is appended per group — the measured-cost
+        feed for `repro.api.OracleStrategy` (padding fields let it see
+        TRUE per-token costs, not padded-shape artefacts). This trades
+        away the concurrent dispatch of disjoint groups, so only enable
+        it when measuring.
+
+        `self.last_run_stats` always aggregates {real_tokens,
+        padded_tokens, padding_efficiency, exe_misses, groups} for the
+        run — the benchmark/CI telemetry feed."""
         import time as _time
         total_tokens = 0.0
         g_acc = None
         loss_acc = 0.0
+        agg = {"real_tokens": 0, "padded_tokens": 0, "exe_misses": 0,
+               "groups": 0}
         for mb in plan.micro_batches:
             start = 0
             handles = []
@@ -128,15 +211,20 @@ class DHPExecutor:
                     # strategies) never take this branch.
                     start = 0
                 seqs = [data.by_id(i) for i in g.seq_ids]
-                bucket = pow2_bucket(max(len(s) for s in seqs), 64)
-                bucket += (-bucket) % g.degree     # shardable over cp
-                np_batch = padded_batch(seqs, bucket)
-                misses = self.pool.stats.exe_misses
-                step = self._group_grad_fn(start, g.degree, len(seqs),
-                                           bucket)
-                compiled = self.pool.stats.exe_misses > misses
+                np_batch, real, padded, bucket = self._group_batch(
+                    seqs, g.degree)
+                if self.packed:
+                    step, compiled = self._packed_grad_fn(
+                        start, g.degree, bucket)
+                else:
+                    step, compiled = self._group_grad_fn(
+                        start, g.degree, len(seqs), bucket)
                 batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
                 n_tok = float(np_batch["mask"].sum())
+                agg["real_tokens"] += real
+                agg["padded_tokens"] += padded
+                agg["exe_misses"] += int(compiled)
+                agg["groups"] += 1
                 if timings is None:
                     handles.append((step(params, batch), n_tok))  # async
                 else:
@@ -149,6 +237,9 @@ class DHPExecutor:
                         "bucket": bucket,
                         "seconds": _time.perf_counter() - t0,
                         "compiled": compiled,
+                        "real_tokens": real,
+                        "padded_tokens": padded,
+                        "padding_efficiency": real / max(padded, 1),
                     })
                     handles.append((out, n_tok))
                 start += g.degree
@@ -160,6 +251,9 @@ class DHPExecutor:
                     lambda a: np.asarray(a, np.float32) * w, grads)
                 g_acc = g_np if g_acc is None else jax.tree.map(
                     np.add, g_acc, g_np)
+        agg["padding_efficiency"] = (
+            agg["real_tokens"] / max(agg["padded_tokens"], 1))
+        self.last_run_stats = agg
         grads = jax.tree.map(lambda a: jnp.asarray(a / total_tokens),
                              g_acc)
         return jnp.asarray(loss_acc / total_tokens), grads

@@ -9,17 +9,25 @@ the dominant reconfiguration cost). `GroupPool` caches both:
   * `mesh_for(start, degree)`   — a (cp, model)-axis mesh over the device
     slice [start, start+degree) of the replica grid;
   * `executable_for(key, build)`— memoized compiled step functions keyed
-    by (degree, padded sequence bucket, microbatch rows, ...).
+    by (degree, padded bucket, ...); returns `(exe, was_miss)` so callers
+    can attribute compile time to the group that actually triggered it.
 
-Sequence lengths are bucketed (pow-2 padding by default) so the number of
-distinct executables stays bounded over a training run — mirroring the
-paper's observation that "the total number of unique groups required is
-limited".
+Sequence lengths are bucketed so the number of distinct executables stays
+bounded over a training run — mirroring the paper's observation that "the
+total number of unique groups required is limited". The bucket ladder is
+configurable (`make_bucket_fn`): pow2 (default, fewest executables,
+worst-case 2x padding), geometric 1.25x (worst-case 1.25x padding, more
+rungs), or multiple-of-256 (near-constant absolute padding, most rungs).
+The executable cache is optionally LRU-capped (`max_executables`) so long
+heterogeneous runs cannot grow host memory without bound.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Hashable, Tuple
+import math
+from collections import OrderedDict
+from functools import partial
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple, Union
 
 import numpy as np
 
@@ -32,29 +40,80 @@ def pow2_bucket(n: int, minimum: int = 128) -> int:
     return b
 
 
+def geometric_bucket(n: int, minimum: int = 128,
+                     ratio: float = 1.25) -> int:
+    """Smallest rung of a geometric `ratio` ladder >= n (8-aligned).
+
+    Worst-case padding overhead is `ratio` (vs 2x for pow2) at the cost
+    of log_ratio / log_2 more distinct rungs (~3.1x for ratio=1.25)."""
+    b = minimum
+    while b < n:
+        b = int(math.ceil(b * ratio / 8.0)) * 8
+    return b
+
+
+def multiple_bucket(n: int, multiple: int = 256) -> int:
+    """Round up to a multiple — near-constant absolute padding; the rung
+    count grows linearly with the longest length seen."""
+    return max(multiple, ((n + multiple - 1) // multiple) * multiple)
+
+
+BUCKET_LADDERS = ("pow2", "geometric", "mult256")
+
+
+def make_bucket_fn(kind: Union[str, Callable[[int], int]] = "pow2",
+                   minimum: int = 64) -> Callable[[int], int]:
+    """Resolve a bucket-ladder name (or pass a callable through)."""
+    if callable(kind):
+        return kind
+    if kind == "pow2":
+        return partial(pow2_bucket, minimum=minimum)
+    if kind == "geometric":
+        return partial(geometric_bucket, minimum=minimum)
+    if kind == "mult256":
+        return multiple_bucket
+    raise ValueError(
+        f"unknown bucket ladder {kind!r}; expected one of "
+        f"{BUCKET_LADDERS} or a callable")
+
+
 @dataclasses.dataclass
 class PoolStats:
     mesh_hits: int = 0
     mesh_misses: int = 0
     exe_hits: int = 0
     exe_misses: int = 0
+    exe_evictions: int = 0
 
 
 class GroupPool:
     """Cache of sub-meshes and compiled executables for CP groups."""
 
     def __init__(self, devices, model_axis: int = 1,
-                 axis_names: Tuple[str, str] = ("cp", "model")):
+                 axis_names: Tuple[str, str] = ("cp", "model"),
+                 bucket_fn: Union[str, Callable[[int], int]] = "pow2",
+                 max_executables: Optional[int] = None):
         """`devices`: flat list of devices, viewed as a
         (n_replicas, model_axis) grid. model_axis=1 means a replica is a
-        single device (TP folded away — the CPU-demo case)."""
+        single device (TP folded away — the CPU-demo case).
+
+        `bucket_fn`: padding-bucket ladder, a name from BUCKET_LADDERS
+        or a callable n -> bucket. `max_executables`: LRU cap on the
+        executable cache (None = unbounded)."""
         self.devices = np.asarray(devices).reshape(-1, model_axis)
         self.n_replicas = self.devices.shape[0]
         self.model_axis = model_axis
         self.axis_names = axis_names
+        self.bucket_fn = make_bucket_fn(bucket_fn)
+        self.max_executables = max_executables
         self._meshes: Dict[Tuple[int, int], Any] = {}
-        self._exes: Dict[Hashable, Any] = {}
+        self._exes: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.stats = PoolStats()
+
+    # ------------------------------------------------------------------
+    def bucket(self, n: int) -> int:
+        """Padding bucket for `n` tokens under the pool's ladder."""
+        return self.bucket_fn(n)
 
     # ------------------------------------------------------------------
     def mesh_for(self, start: int, degree: int):
@@ -73,15 +132,26 @@ class GroupPool:
         return mesh
 
     # ------------------------------------------------------------------
-    def executable_for(self, key: Hashable, build: Callable[[], Any]):
-        """Memoized compile: `build()` is invoked only on pool miss."""
+    def executable_for(self, key: Hashable,
+                       build: Callable[[], Any]) -> Tuple[Any, bool]:
+        """Memoized compile: `build()` is invoked only on pool miss.
+
+        Returns `(exe, was_miss)` — was_miss tells the caller whether
+        THIS lookup compiled (stats deltas misattribute when several
+        groups interleave in one run_plan). LRU: hits refresh recency;
+        over-cap inserts evict the least-recently-used executable."""
         if key in self._exes:
             self.stats.exe_hits += 1
-            return self._exes[key]
+            self._exes.move_to_end(key)
+            return self._exes[key], False
         self.stats.exe_misses += 1
         exe = build()
         self._exes[key] = exe
-        return exe
+        if (self.max_executables is not None
+                and len(self._exes) > self.max_executables):
+            self._exes.popitem(last=False)
+            self.stats.exe_evictions += 1
+        return exe, True
 
     def __len__(self) -> int:
         return len(self._exes)

@@ -15,7 +15,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence as Seq
+from typing import Dict, List, Sequence as Seq, Tuple
+
+import numpy as np
 
 from .cost_model import CostModel, SeqInfo
 
@@ -97,6 +99,61 @@ def pack_sequences(
             seqs=[s], d_min=d_min,
             capacity=min(d_min * e_act, max(cap_clip, need)), used=need))
     return bins
+
+
+def flatten_group(
+    seqs: Seq[np.ndarray],
+    bucket: int,
+    pad_id: int = 0,
+) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Concatenate an atomic group's sequences into ONE packed buffer.
+
+    The executor's packed varlen path: instead of padding each sequence
+    to a per-sequence bucket ([n_seqs, bucket] with up to ~2x waste),
+    all tokens live in a single [1, bucket] row padded only at the TAIL.
+    The executable shape stops depending on n_seqs entirely.
+
+    Returns `(batch, cu_seqlens)`:
+      batch = {tokens, labels, mask, positions, segment_ids}, all
+        [1, bucket]. positions reset at every segment boundary (RoPE
+        sees each sequence at its own offsets); segment_ids is the
+        block-diagonal attention table (-1 = tail padding); labels are
+        next-token WITHIN each segment — the last token of a segment is
+        masked, never predicting across a boundary.
+      cu_seqlens = int32 [n_seqs + 1] cumulative offsets (the standard
+        varlen format: segment i spans [cu[i], cu[i+1])). Host-side
+        metadata only — it is NOT shipped to the device, so its length
+        cannot re-trigger compilation.
+    """
+    total = int(sum(len(s) for s in seqs))
+    if total > bucket:
+        raise ValueError(f"packed tokens {total} exceed bucket {bucket}")
+    tokens = np.full((1, bucket), pad_id, np.int32)
+    labels = np.full((1, bucket), pad_id, np.int32)
+    mask = np.zeros((1, bucket), np.float32)
+    positions = np.zeros((1, bucket), np.int32)
+    segment_ids = np.full((1, bucket), -1, np.int32)
+    cu = np.zeros(len(seqs) + 1, np.int32)
+    off = 0
+    for i, s in enumerate(seqs):
+        L = len(s)
+        tokens[0, off:off + L] = s
+        if L > 1:
+            labels[0, off:off + L - 1] = s[1:]
+            mask[0, off:off + L - 1] = 1.0
+        positions[0, off:off + L] = np.arange(L, dtype=np.int32)
+        segment_ids[0, off:off + L] = i
+        off += L
+        cu[i + 1] = off
+    batch = {"tokens": tokens, "labels": labels, "mask": mask,
+             "positions": positions, "segment_ids": segment_ids}
+    return batch, cu
+
+
+def packing_efficiency(cu_seqlens: np.ndarray, bucket: int) -> float:
+    """real tokens / padded bucket — the waste metric DHP's a1(1+eta)|s|^2
+    term pays for (1.0 = no padding)."""
+    return float(cu_seqlens[-1]) / float(bucket) if bucket else 0.0
 
 
 def validate_packing(groups: Seq[AtomicGroup], cost_model: CostModel,

@@ -15,8 +15,16 @@ term of Eq. 8). TPU-native design, not a CUDA port:
     from a ppermute neighbour carry their global offset).
   * causal/sliding hops skip fully-masked KV blocks via pl.when —
     compute truly drops, unlike a masked dense matmul.
+  * packed varlen mode (`flash_attention_packed_flat`): a whole atomic
+    group concatenated into ONE token buffer with a segment-id table;
+    attention is block-diagonal over segments and cross-segment /
+    padding / future-causal KV tiles are skipped via pl.when. This is
+    what collapses the executor's executable key space (see
+    core/executor.py) — group shape no longer depends on how many
+    sequences were packed, only on the padded packed bucket.
 
-Validated against ref.flash_attention_ref in interpret mode (CPU).
+Validated against ref.flash_attention_ref / ref.flash_attention_packed_ref
+in interpret mode (CPU).
 """
 from __future__ import annotations
 
@@ -99,6 +107,146 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l = l_scr[...]
         o_ref[0] = (acc_scr[...] /
                     jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _packed_kernel(q_ref, k_ref, v_ref, segq_ref, segk_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, mode: str,
+                   window: Optional[int], sm_scale: float,
+                   block_q: int, block_k: int, kv_offset: int):
+    """Segment-aware (packed varlen) flash attention tile.
+
+    All sequences of a group live concatenated in ONE token buffer;
+    attention is block-diagonal across segment boundaries. Inside a
+    segment, packed indices are monotone in position, so the causal /
+    sliding structure is expressed directly in packed coordinates. A KV
+    tile with no attendable (q, k) pair is skipped via pl.when — the MXU
+    work truly drops, it is not a masked dense matmul.
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kv_offset + ki * block_k
+    seg_q = segq_ref[0]                                  # [bq] int32
+    seg_k = segk_ref[0]                                  # [bk] int32
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 1)
+    # same segment; padding (seg < 0) never attends or is attended
+    valid = (seg_q[:, None] == seg_k[None, :]) & (seg_q >= 0)[:, None]
+    if mode != "full":
+        valid &= kpos <= qpos
+        if mode == "sliding":
+            valid &= kpos > qpos - window
+    # O(bq*bk) mask vs O(bq*bk*D) matmuls: deciding the skip costs 1/D
+    # of the tile; fully-masked tiles (cross-segment, future-causal,
+    # out-of-window, tail padding) skip both MXU passes.
+    live = jnp.any(valid)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        # rows of this tile with no valid key contribute nothing
+        p = jnp.where(valid.any(axis=1)[:, None], p, 0.0)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "window", "block_q", "block_k", "kv_offset",
+                     "interpret"))
+def flash_attention_packed_flat(q, k, v, segment_ids, *,
+                                mode: str = "causal",
+                                window: Optional[int] = None,
+                                kv_segment_ids=None,
+                                block_q: int = DEFAULT_BLOCK_Q,
+                                block_k: int = DEFAULT_BLOCK_K,
+                                kv_offset: int = 0,
+                                interpret: bool = True) -> jax.Array:
+    """Packed variable-length flash attention.
+
+    q: [BH, Sq, D]; k/v: [BH, Sk, D]; segment_ids: [Sq] or [BH, Sq]
+    int32, -1 for tail padding. `kv_segment_ids` defaults to
+    `segment_ids` (self-attention); pass the neighbour's table for a
+    ring hop together with its `kv_offset`.
+
+    Rows whose segment never matches (tail padding) emit exact zeros.
+    """
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    kv_seg = segment_ids if kv_segment_ids is None else kv_segment_ids
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0))) if pad_k else v
+
+    def _norm_seg(seg, length, pad, fill):
+        seg = jnp.asarray(seg, jnp.int32)
+        if seg.ndim == 1:
+            seg = jnp.broadcast_to(seg[None], (BH, length))
+        return jnp.pad(seg, ((0, 0), (0, pad)), constant_values=fill)
+
+    segq = _norm_seg(segment_ids, Sq, pad_q, -1)         # [BH, Sq+pad]
+    segk = _norm_seg(kv_seg, Sk, pad_k, -2)              # [BH, Sk+pad]
+    nq = (Sq + pad_q) // block_q
+    nk = (Sk + pad_k) // block_k
+
+    kernel = functools.partial(
+        _packed_kernel, mode=mode, window=window,
+        sm_scale=1.0 / math.sqrt(D), block_q=block_q, block_k=block_k,
+        kv_offset=kv_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_k), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pad_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+            pltpu.VMEM((block_q, D), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qp, kp, vp, segq, segk)
+    return out[:, :Sq]
 
 
 @functools.partial(

@@ -12,8 +12,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .flash_attention import flash_attention_flat
-from .ref import flash_attention_ref, ssd_chunk_ref
+from .flash_attention import (flash_attention_flat,
+                              flash_attention_packed_flat)
+from .ref import (flash_attention_packed_ref, flash_attention_ref,
+                  ssd_chunk_ref)
 from .rglru_scan import rglru_scan_pallas
 from .ssd_chunk import ssd_chunk_pallas
 
@@ -45,6 +47,45 @@ def flash_attention(q, k, v, *, mode: str = "causal",
         of = flash_attention_flat(qf, kf, vf, mode=mode, window=window,
                                   block_q=block_q, block_k=block_k,
                                   interpret=interpret)
+    return of.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit,
+         static_argnames=("mode", "window", "ref", "interpret", "block_q",
+                          "block_k"))
+def flash_attention_packed(q, k, v, segment_ids, *, mode: str = "causal",
+                          window: Optional[int] = None, ref: bool = False,
+                          interpret: bool = True, block_q: int = 128,
+                          block_k: int = 128) -> jax.Array:
+    """Packed varlen attention in model layout.
+
+    q: [B,S,H,D]; k/v: [B,S,Hkv,D]; segment_ids: [B,S] or [S] int32
+    (-1 = tail padding) -> [B,S,H,D]. Each batch row is an independent
+    packed buffer; attention is block-diagonal over its segments.
+    """
+    B, Sq, H, D = q.shape
+    k = _expand_gqa(k, H)
+    v = _expand_gqa(v, H)
+    Sk = k.shape[1]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    seg = jnp.asarray(segment_ids, jnp.int32)
+    if seg.ndim == 2:                       # [B,S] -> [B*H, S]
+        seg = jnp.repeat(seg, H, axis=0)
+    if ref:
+        if seg.ndim == 1:
+            of = flash_attention_packed_ref(qf, kf, vf, seg, mode=mode,
+                                            window=window)
+        else:
+            of = jax.vmap(lambda qq, kk, vv, ss: flash_attention_packed_ref(
+                qq[None], kk[None], vv[None], ss, mode=mode,
+                window=window)[0])(qf, kf, vf, seg)
+    else:
+        of = flash_attention_packed_flat(qf, kf, vf, seg, mode=mode,
+                                         window=window, block_q=block_q,
+                                         block_k=block_k,
+                                         interpret=interpret)
     return of.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
 
 
@@ -83,5 +124,5 @@ def ssd_chunk_scan(C, B, x, da, dt, *, ref: bool = False,
     return y_intra + y_inter
 
 
-__all__ = ["flash_attention", "rglru_scan_pallas", "ssd_chunk_pallas",
-           "ssd_chunk_scan"]
+__all__ = ["flash_attention", "flash_attention_packed",
+           "rglru_scan_pallas", "ssd_chunk_pallas", "ssd_chunk_scan"]

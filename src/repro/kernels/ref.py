@@ -34,6 +34,39 @@ def flash_attention_ref(q, k, v, *, mode: str = "causal",
     return o.astype(q.dtype)
 
 
+def flash_attention_packed_ref(q, k, v, segment_ids, *,
+                               mode: str = "causal",
+                               window: Optional[int] = None) -> jax.Array:
+    """Block-diagonal (packed varlen) oracle. q/k/v: [BH, S, D] packed
+    token buffers; segment_ids: [S] int32, -1 marks tail padding.
+
+    Attention is masked to same-segment pairs; within a segment the
+    causal/sliding structure uses packed indices directly (positions are
+    monotone inside a segment, so `kpos <= qpos` in packed coordinates IS
+    per-segment causality). Rows with no attendable key (padding) emit
+    exact zeros — matching the Pallas kernel's skipped-tile semantics.
+    """
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    seg = jnp.asarray(segment_ids, jnp.int32)
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    m = (seg[:Sq, None] == seg[None, :Sk]) & (seg[:Sq, None] >= 0)
+    if mode != "full":
+        m &= kpos[None, :] <= qpos[:, None]
+        if mode == "sliding":
+            assert window is not None
+            m &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(m[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    any_valid = m.any(axis=-1)                          # [Sq]
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    o = jnp.where(any_valid[None, :, None], o, 0.0)
+    return o.astype(q.dtype)
+
+
 def ssd_chunk_ref(C, B, x, da, dt):
     """Oracle for the SSD intra-chunk step (ssd_chunk.py).
 

@@ -55,8 +55,17 @@ def _mask_bias(qpos, kpos, mode: str, window: Optional[int]):
     return jnp.where(m, 0.0, NEG_INF)
 
 
+def _segment_bias(seg_q, seg_k):
+    """[B,S,T] additive bias: NEG_INF across segment boundaries.
+
+    seg < 0 marks tail padding — it never attends nor is attended."""
+    same = (seg_q[:, :, None] == seg_k[:, None, :]) \
+        & (seg_q >= 0)[:, :, None]
+    return jnp.where(same, 0.0, NEG_INF)
+
+
 def attn_reference(q, k, v, *, mode: str, window=None, q_offset=0,
-                   kv_offset=0):
+                   kv_offset=0, segment_ids=None):
     B, S, H, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
@@ -66,8 +75,18 @@ def attn_reference(q, k, v, *, mode: str, window=None, q_offset=0,
     qpos = q_offset + jnp.arange(S)
     kpos = kv_offset + jnp.arange(T)
     s = s + _mask_bias(qpos, kpos, mode, window)[None, :, None, None, :]
+    if segment_ids is not None:
+        seg = jnp.asarray(segment_ids, jnp.int32)
+        if seg.ndim == 1:
+            seg = jnp.broadcast_to(seg[None], (B, S))
+        s = s + _segment_bias(seg, seg)[:, :, None, None, :]
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    if segment_ids is not None:
+        # tail-padding rows (seg < 0) have no attendable key: emit exact
+        # zeros like every other packed implementation, instead of the
+        # uniform softmax over an all-NEG_INF row
+        o = jnp.where((seg >= 0)[:, :, None, None, None], o, 0.0)
     return o.reshape(B, S, H, D).astype(q.dtype)
 
 
@@ -89,31 +108,65 @@ def _chunk_bias(qpos, i, chunk, T, mode, window, kv_offset):
     return jnp.where(kpos[None, :] < kv_offset + T, bias, NEG_INF)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _attn_chunked_core(q, k, v, mode, window, q_offset, kv_offset, chunk):
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _attn_chunked_core(q, k, v, seg_q, seg_k, mode, window, q_offset,
+                       kv_offset, chunk):
     """Flash attention in pure JAX: online-softmax scan over KV chunks,
     with a custom VJP that RECOMPUTES the probability tiles per chunk in
     the backward pass (flash-attention-2 backward). Live memory is
     O(S*chunk), forward and backward — the property the Pallas kernel
-    has on TPU, preserved in the portable path."""
-    o, _ = _attn_chunked_fwd_impl(q, k, v, mode, window, q_offset,
-                                  kv_offset, chunk)
+    has on TPU, preserved in the portable path.
+
+    `seg_q`/`seg_k` (None, or float32 [B,S]/[B,T] with -1 = padding)
+    switch on packed-varlen masking: attention becomes block-diagonal
+    over segments. Float dtype so they ride through the custom VJP as
+    ordinary primals with zero cotangents."""
+    o, _ = _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode, window,
+                                  q_offset, kv_offset, chunk)
     return o
 
 
 def attn_chunked(q, k, v, *, mode: str = "causal", window=None,
-                 q_offset=0, kv_offset=0, chunk: int = 1024):
-    return _attn_chunked_core(q, k, v, mode, window, q_offset, kv_offset,
-                              chunk)
+                 q_offset=0, kv_offset=0, chunk: int = 1024,
+                 segment_ids=None):
+    seg_q = seg_k = None
+    if segment_ids is not None:
+        seg = jnp.asarray(segment_ids, jnp.float32)
+        if seg.ndim == 1:
+            seg = jnp.broadcast_to(seg[None], (q.shape[0], q.shape[1]))
+        assert k.shape[1] == q.shape[1], \
+            "packed segments require self-attention (Sk == Sq)"
+        seg_q = seg_k = seg
+    return _attn_chunked_core(q, k, v, seg_q, seg_k, mode, window,
+                              q_offset, kv_offset, chunk)
 
 
-def _attn_chunked_fwd_impl(q, k, v, mode, window, q_offset, kv_offset,
-                           chunk):
+def _seg_chunks(seg_k, chunk, n_blk):
+    """[B,T] float seg table -> [n_blk, B, chunk] scan slices."""
+    B, T = seg_k.shape
+    pad = n_blk * chunk - T
+    segp = jnp.pad(seg_k, ((0, 0), (0, pad)), constant_values=-1.0)
+    return segp.reshape(B, n_blk, chunk).transpose(1, 0, 2)
+
+
+def _chunk_bias_seg(qpos, i, chunk, T, mode, window, kv_offset,
+                    seg_q, seg_kc):
+    """[B or 1, S, chunk] bias: positional mask + optional segment mask."""
+    bias = _chunk_bias(qpos, i, chunk, T, mode, window, kv_offset)[None]
+    if seg_q is not None:
+        bias = bias + _segment_bias(seg_q, seg_kc)
+    return bias
+
+
+def _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode, window, q_offset,
+                           kv_offset, chunk):
     B, S, H, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
     chunk = min(chunk, T)
     kb, vb, n_blk = _kv_blocks(k, v, chunk)
+    segb = (_seg_chunks(seg_k, chunk, n_blk) if seg_k is not None
+            else jnp.zeros((n_blk, 1, 1)))
     scale = 1.0 / math.sqrt(D)
     qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
     qpos = q_offset + jnp.arange(S)
@@ -124,11 +177,12 @@ def _attn_chunked_fwd_impl(q, k, v, mode, window, q_offset, kv_offset,
 
     def body(carry, blk):
         m, l, acc = carry
-        kc, vc, i = blk
+        kc, vc, i, segc = blk
         s = jnp.einsum("bskgd,btkd->bskgt", qg,
                        kc.astype(jnp.float32)) * scale
-        s = s + _chunk_bias(qpos, i, chunk, T, mode, window,
-                            kv_offset)[None, :, None, None, :]
+        s = s + _chunk_bias_seg(qpos, i, chunk, T, mode, window,
+                                kv_offset, seg_q,
+                                segc)[:, :, None, None, :]
         m_new = jnp.maximum(m, s.max(axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -138,26 +192,29 @@ def _attn_chunked_fwd_impl(q, k, v, mode, window, q_offset, kv_offset,
         return (m_new, l, acc), None
 
     (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blk)))
+        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blk), segb))
     lse = m + jnp.log(jnp.maximum(l, 1e-30))           # [B,S,Hkv,G]
     o = acc / jnp.maximum(l[..., None], 1e-30)
     out = o.reshape(B, S, H, D).astype(q.dtype)
     return out, lse
 
 
-def _attn_chunked_fwd(q, k, v, mode, window, q_offset, kv_offset, chunk):
-    out, lse = _attn_chunked_fwd_impl(q, k, v, mode, window, q_offset,
-                                      kv_offset, chunk)
-    return out, (q, k, v, out, lse)
+def _attn_chunked_fwd(q, k, v, seg_q, seg_k, mode, window, q_offset,
+                      kv_offset, chunk):
+    out, lse = _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode,
+                                      window, q_offset, kv_offset, chunk)
+    return out, (q, k, v, seg_q, seg_k, out, lse)
 
 
 def _attn_chunked_bwd(mode, window, q_offset, kv_offset, chunk, res, g):
-    q, k, v, out, lse = res
+    q, k, v, seg_q, seg_k, out, lse = res
     B, S, H, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
     chunk = min(chunk, T)
     kb, vb, n_blk = _kv_blocks(k, v, chunk)
+    segb = (_seg_chunks(seg_k, chunk, n_blk) if seg_k is not None
+            else jnp.zeros((n_blk, 1, 1)))
     scale = 1.0 / math.sqrt(D)
     qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
     gg = g.reshape(B, S, Hkv, G, D).astype(jnp.float32)
@@ -166,11 +223,12 @@ def _attn_chunked_bwd(mode, window, q_offset, kv_offset, chunk, res, g):
     qpos = q_offset + jnp.arange(S)
 
     def body(dq, blk):
-        kc, vc, i = blk
+        kc, vc, i, segc = blk
         s = jnp.einsum("bskgd,btkd->bskgt", qg,
                        kc.astype(jnp.float32)) * scale
-        s = s + _chunk_bias(qpos, i, chunk, T, mode, window,
-                            kv_offset)[None, :, None, None, :]
+        s = s + _chunk_bias_seg(qpos, i, chunk, T, mode, window,
+                                kv_offset, seg_q,
+                                segc)[:, :, None, None, :]
         p = jnp.exp(s - lse[..., None])                 # recomputed tile
         dv = jnp.einsum("bskgt,bskgd->btkd", p, gg)
         dp = jnp.einsum("bskgd,btkd->bskgt", gg, vc.astype(jnp.float32))
@@ -182,11 +240,14 @@ def _attn_chunked_bwd(mode, window, q_offset, kv_offset, chunk, res, g):
 
     dq0 = jnp.zeros((B, S, Hkv, G, D), jnp.float32)
     dq, (dkb, dvb) = jax.lax.scan(body, dq0,
-                                  (kb, vb, jnp.arange(n_blk)))
+                                  (kb, vb, jnp.arange(n_blk), segb))
     dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, n_blk * chunk, Hkv, D)
     dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, n_blk * chunk, Hkv, D)
+    dseg_q = None if seg_q is None else jnp.zeros_like(seg_q)
+    dseg_k = None if seg_k is None else jnp.zeros_like(seg_k)
     return (dq.reshape(B, S, H, D).astype(q.dtype),
-            dk[:, :T].astype(k.dtype), dv[:, :T].astype(v.dtype))
+            dk[:, :T].astype(k.dtype), dv[:, :T].astype(v.dtype),
+            dseg_q, dseg_k)
 
 
 _attn_chunked_core.defvjp(_attn_chunked_fwd, _attn_chunked_bwd)
@@ -274,7 +335,13 @@ def attention(params: dict, x: jax.Array, *, n_heads: int, kv_heads: int,
               cross_kv: Optional[tuple] = None,
               cp_axis: Optional[str] = None,
               attn_chunk: int = 1024,
+              segment_ids=None,
               return_kv: bool = False):
+    """`segment_ids` ([B,S] int32, -1 = padding) selects the packed
+    varlen path: x is a packed buffer of concatenated sequences and
+    attention is block-diagonal over segments (causal/full/sliding
+    *within* each). Pass per-segment-reset `positions` so RoPE matches.
+    """
     B, S, _ = x.shape
     q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
     if cross_kv is None:
@@ -290,23 +357,32 @@ def attention(params: dict, x: jax.Array, *, n_heads: int, kv_heads: int,
 
     if cp_axis is not None and cross_kv is None:
         # Ring-style context parallelism (inside shard_map): the
-        # sequence axis of x/positions is sharded over `cp_axis`.
+        # sequence axis of x/positions/segment_ids is sharded over
+        # `cp_axis`; the segment table travels with each KV hop.
         from ..parallel.ring_attention import ring_attention
         o = ring_attention(q, k, v, positions, axis_name=cp_axis,
-                           mode=mode, window=window)
+                           mode=mode, window=window,
+                           q_seg=segment_ids)
         out = o.reshape(B, S, n_heads * head_dim) @ params["wo"]
         return (out, (k, v)) if return_kv else out
 
     if impl == "pallas":
-        from ..kernels.ops import flash_attention
-        o = flash_attention(q, k, v, mode=mode, window=window)
+        if segment_ids is not None:
+            from ..kernels.ops import flash_attention_packed
+            o = flash_attention_packed(q, k, v, segment_ids, mode=mode,
+                                       window=window)
+        else:
+            from ..kernels.ops import flash_attention
+            o = flash_attention(q, k, v, mode=mode, window=window)
     elif impl == "reference":
-        o = attn_reference(q, k, v, mode=mode, window=window)
-    elif mode == "sliding" and cross_kv is None and impl == "chunked":
+        o = attn_reference(q, k, v, mode=mode, window=window,
+                           segment_ids=segment_ids)
+    elif (mode == "sliding" and cross_kv is None and impl == "chunked"
+          and segment_ids is None):
         o = attn_banded(q, k, v, window=window, chunk=min(attn_chunk, 512))
     else:
         o = attn_chunked(q, k, v, mode=mode, window=window,
-                         chunk=attn_chunk)
+                         chunk=attn_chunk, segment_ids=segment_ids)
     out = o.reshape(B, S, n_heads * head_dim) @ params["wo"]
     if return_kv:
         return out, (k, v)

@@ -132,22 +132,26 @@ def forward(params, cfg: ModelConfig, batch,
     attn_mode = mode or ("sliding" if cfg.sliding_window else "causal")
     window = cfg.sliding_window
     positions = batch.get("positions")   # global positions (CP shards)
+    # packed varlen: [B,S] segment table (-1 = tail padding); positions
+    # reset per segment (core/packing.flatten_group produces both)
+    segment_ids = batch.get("segment_ids")
 
     if cfg.family in ("dense", "moe", "ssm", "vlm"):
         block = _BLOCK[cfg.family]
         def body(p_l, h):
             return block(p_l, h, cfg, mode=attn_mode, window=window,
-                         positions=positions)
+                         positions=positions, segment_ids=segment_ids)
         x, aux = apply_stack(params["layers"], x, body, cfg.remat,
                              cfg.scan_layers)
     elif cfg.family == "hybrid":
-        x, aux = _hybrid_forward(params, cfg, x, positions)
+        x, aux = _hybrid_forward(params, cfg, x, positions, segment_ids)
     else:
         raise ValueError(cfg.family)
     return _head(params, cfg, x), aux
 
 
-def _hybrid_block(p_unit, x, cfg: ModelConfig, positions=None):
+def _hybrid_block(p_unit, x, cfg: ModelConfig, positions=None,
+                  segment_ids=None):
     from .transformer import _dense_block, _rec_block
     aux = jnp.zeros((), jnp.float32)
     for name in sorted(p_unit.keys()):
@@ -157,17 +161,19 @@ def _hybrid_block(p_unit, x, cfg: ModelConfig, positions=None):
         else:
             x, a = _dense_block(p_unit[name], x, cfg, mode="sliding",
                                 window=cfg.hybrid.window,
-                                positions=positions)
+                                positions=positions,
+                                segment_ids=segment_ids)
         aux = aux + a
     return x, aux
 
 
-def _hybrid_forward(params, cfg: ModelConfig, x, positions=None):
+def _hybrid_forward(params, cfg: ModelConfig, x, positions=None,
+                    segment_ids=None):
     def body(p_unit, h):
-        return _hybrid_block(p_unit, h, cfg, positions)
+        return _hybrid_block(p_unit, h, cfg, positions, segment_ids)
     x, aux = apply_stack(params["units"], x, body, cfg.remat,
                          cfg.scan_layers)
-    x, a2 = _hybrid_block(params["tail"], x, cfg, positions)
+    x, a2 = _hybrid_block(params["tail"], x, cfg, positions, segment_ids)
     return x, aux + a2
 
 

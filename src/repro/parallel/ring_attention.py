@@ -49,9 +49,11 @@ def shard_sequence(x: jnp.ndarray, degree: int, rank: int, axis: int = 1,
 
 
 def _partial_update(carry, q, k, v, q_pos, k_pos, mode: str,
-                    window: Optional[int]):
+                    window: Optional[int], q_seg=None, k_seg=None):
     """One online-softmax accumulation step. q:[B,S,Hkv,G,D] fp32-scaled,
-    k/v:[B,T,Hkv,D]. carry = (m, l, acc)."""
+    k/v:[B,T,Hkv,D]. carry = (m, l, acc). `q_seg`/`k_seg` ([B,S]/[B,T]
+    int32, -1 = padding) restrict attention to same-segment pairs —
+    the packed-varlen mode; k_seg arrived with this hop's KV shard."""
     m, l, acc = carry
     s = jnp.einsum("bskgd,btkd->bskgt", q, k.astype(jnp.float32))
     mask = k_pos[:, None, :] <= q_pos[:, :, None]  # [B,S,T]
@@ -59,6 +61,9 @@ def _partial_update(carry, q, k, v, q_pos, k_pos, mode: str,
         mask = jnp.ones_like(mask)
     elif mode == "sliding":
         mask &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if q_seg is not None:
+        mask &= (q_seg[:, :, None] == k_seg[:, None, :]) \
+            & (q_seg >= 0)[:, :, None]
     bias = jnp.where(mask, 0.0, NEG_INF)
     s = s + bias[:, :, None, None, :]
     m_new = jnp.maximum(m, s.max(axis=-1))
@@ -71,14 +76,21 @@ def _partial_update(carry, q, k, v, q_pos, k_pos, mode: str,
 
 
 def ring_attention(q, k, v, q_pos, *, axis_name: str,
-                   mode: str = "causal", window: Optional[int] = None
-                   ) -> jax.Array:
+                   mode: str = "causal", window: Optional[int] = None,
+                   q_seg=None) -> jax.Array:
     """Executed INSIDE shard_map. q:[B,S_loc,H,D], k/v:[B,S_loc,Hkv,D],
     q_pos:[B,S_loc] global positions of the local shard.
 
     Any integer ring size is legal — jax.lax.ppermute has no
     power-of-two or head-divisibility constraint (the paper's core
     flexibility argument, §4.1).
+
+    `q_seg` ([B,S_loc] int32, -1 = padding) turns on packed-varlen
+    masking: each hop's KV shard travels WITH its position table AND its
+    segment table, so attention stays block-diagonal over segments no
+    matter which rank currently holds the shard. Positions are
+    per-segment (reset at each boundary); the causal comparison is only
+    consulted for same-segment pairs, where it is exact.
     """
     d = compat.axis_size(axis_name)
     B, S, H, Dh = q.shape
@@ -92,13 +104,19 @@ def ring_attention(q, k, v, q_pos, *, axis_name: str,
     carry = (m, l, acc)
 
     k_cur, v_cur, kpos_cur = k, v, q_pos
+    kseg_cur = q_seg
     perm = [(i, (i - 1) % d) for i in range(d)]
     for hop in range(d):
         carry = _partial_update(carry, qg, k_cur, v_cur, q_pos, kpos_cur,
-                                mode, window)
+                                mode, window, q_seg=q_seg,
+                                k_seg=kseg_cur)
         if hop != d - 1:
-            k_cur, v_cur, kpos_cur = jax.lax.ppermute(
-                (k_cur, v_cur, kpos_cur), axis_name, perm)
+            if q_seg is None:
+                k_cur, v_cur, kpos_cur = jax.lax.ppermute(
+                    (k_cur, v_cur, kpos_cur), axis_name, perm)
+            else:
+                k_cur, v_cur, kpos_cur, kseg_cur = jax.lax.ppermute(
+                    (k_cur, v_cur, kpos_cur, kseg_cur), axis_name, perm)
     m, l, acc = carry
     o = acc / jnp.maximum(l[..., None], 1e-30)
     return o.reshape(B, S, H, Dh).astype(q.dtype)

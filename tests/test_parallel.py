@@ -133,9 +133,12 @@ def test_group_pool_caches_meshes_and_executables():
     assert m1 is m2
     assert pool.stats.mesh_hits == 1
     calls = []
-    e1 = pool.executable_for(("k", 1), lambda: calls.append(1) or "exe")
-    e2 = pool.executable_for(("k", 1), lambda: calls.append(1) or "exe")
+    e1, miss1 = pool.executable_for(("k", 1),
+                                    lambda: calls.append(1) or "exe")
+    e2, miss2 = pool.executable_for(("k", 1),
+                                    lambda: calls.append(1) or "exe")
     assert e1 == e2 and len(calls) == 1
+    assert miss1 and not miss2
     assert pow2_bucket(100) == 128
     assert pow2_bucket(128) == 128
     assert pow2_bucket(129) == 256
