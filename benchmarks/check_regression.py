@@ -1,0 +1,99 @@
+"""CI gate: fail when median scheduling latency regresses vs baseline.
+
+Compares the `*/schedule_ms` rows of a freshly generated
+`benchmarks/run.py --json` file against the newest committed
+`BENCH_*.json` baseline (the artifact a previous PR checked in). The
+gate trips when the median regresses by more than `--threshold` (default
+1.2 = +20%); when no baseline exists — or the baseline is the file being
+checked — it skips cleanly so the first PR can bootstrap the trajectory.
+
+  PYTHONPATH=src python -m benchmarks.check_regression --new BENCH_pr3.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import statistics
+import sys
+
+
+def load_rows(path: str) -> list:
+    with open(path) as f:
+        return json.load(f).get("rows", [])
+
+
+def schedule_ms_values(rows: list) -> list:
+    return [r["value"] for r in rows
+            if r["name"].endswith("/schedule_ms")]
+
+
+def calibration(rows: list):
+    """The fixed-workload machine-speed row run.py always emits; when
+    BOTH files carry it, medians are normalized by it so the gate
+    compares scheduling efficiency, not runner hardware."""
+    for r in rows:
+        if r["name"] == "calibration/host_speed" and r["value"] > 0:
+            return r["value"]
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--new", required=True,
+                    help="freshly generated run.py --json output")
+    ap.add_argument("--baseline-glob", default="BENCH_*.json",
+                    help="committed baseline files to compare against")
+    ap.add_argument("--threshold", type=float, default=1.2,
+                    help="max allowed new/old median ratio")
+    args = ap.parse_args()
+
+    new_abs = os.path.abspath(args.new)
+
+    def pr_order(path):
+        # numeric-aware: BENCH_pr10.json sorts after BENCH_pr9.json
+        nums = [int(s) for s in re.findall(r"\d+",
+                                           os.path.basename(path))]
+        return (nums, path)
+
+    baselines = sorted((p for p in glob.glob(args.baseline_glob)
+                        if os.path.abspath(p) != new_abs),
+                       key=pr_order)
+    if not baselines:
+        print(f"no baseline matching {args.baseline_glob!r} "
+              f"(other than {args.new}) — skipping regression gate")
+        return 0
+    baseline = baselines[-1]          # newest committed trajectory point
+
+    new_rows, old_rows = load_rows(args.new), load_rows(baseline)
+    new_vals = schedule_ms_values(new_rows)
+    old_vals = schedule_ms_values(old_rows)
+    if not new_vals or not old_vals:
+        print(f"no */schedule_ms rows in "
+              f"{args.new if not new_vals else baseline} — skipping")
+        return 0
+
+    med_new = statistics.median(new_vals)
+    med_old = statistics.median(old_vals)
+    cal_new, cal_old = calibration(new_rows), calibration(old_rows)
+    if cal_new and cal_old:
+        med_new, med_old = med_new / cal_new, med_old / cal_old
+        unit = "x host-speed-normalized"
+    else:
+        unit = "us (raw — no calibration row in one file)"
+    ratio = med_new / med_old if med_old > 0 else float("inf")
+    print(f"median schedule_ms: {med_old:.4g} ({baseline}) -> "
+          f"{med_new:.4g} ({args.new}) [{unit}]; ratio {ratio:.3f} "
+          f"(threshold {args.threshold})")
+    if ratio > args.threshold:
+        print(f"FAIL: scheduling latency regressed "
+              f">{(args.threshold - 1) * 100:.0f}%")
+        return 1
+    print("ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

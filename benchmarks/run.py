@@ -20,6 +20,34 @@ import sys
 import traceback
 
 
+def _calibration_row(report) -> None:
+    """Machine-speed reference: a FIXED pure-Python 2D-DP solve — the
+    same kind of host work `schedule_ms` measures. check_regression
+    normalizes schedule-latency medians by this row, so the CI gate
+    compares scheduling efficiency across PRs rather than runner
+    hardware."""
+    import time
+
+    from repro.core import allocate
+    from repro.core.cost_model import SeqInfo
+    from repro.core.packing import AtomicGroup
+
+    groups = [
+        AtomicGroup(seqs=[SeqInfo(length=256 * (1 + i % 7), seq_id=i)],
+                    d_min=1, capacity=1e9, used=0.0)
+        for i in range(24)]
+
+    def tf(seqs, d):
+        return sum(s.length for s in seqs) / d + 0.1 * d
+
+    t0 = time.perf_counter()
+    for _ in range(3):
+        allocate(groups, 32, tf)
+    report("calibration/host_speed", (time.perf_counter() - t0) * 1e6,
+           "fixed 2D-DP solve; schedule_ms normalizer for "
+           "check_regression")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -39,6 +67,8 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         rows.append({"name": name, "value": us, "derived": derived})
         sys.stdout.flush()
+
+    _calibration_row(report)
 
     if args.smoke:
         from . import bench_end_to_end, bench_kernels

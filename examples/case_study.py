@@ -15,7 +15,7 @@ sys.path.insert(0, "src")
 import numpy as np                                     # noqa: E402
 
 from repro.api import get_strategy                     # noqa: E402
-from repro.core import (CostModel, analytic_coeffs,
+from repro.core import (CostModel, analytic_coeffs, diff_plans,
                         sample_batch)                  # noqa: E402
 
 N_RANKS = 32
@@ -52,6 +52,7 @@ def main():
                                    kv_heads=4, ffn=18944, vocab=152000))
     budget = 3e9
     rng = np.random.default_rng(7)
+    prev_plans = {}
     for case, ds in (("Case 1 (OpenVid-like, long-tailed)", "openvid"),
                      ("Case 2 (MSRVTT-like, uniform)", "msrvtt")):
         seqs = sample_batch(ds, 64, rng, max_tokens=262144)
@@ -65,6 +66,13 @@ def main():
                 cm, N_RANKS, budget)
             plans[label] = strat.plan(seqs)
             render(plans[label], N_RANKS, label)
+            # GroupDelta vs the same strategy's previous-case plan: how
+            # much of the communication-group layout survives a shift in
+            # the length distribution (what the GroupPool reuses).
+            delta = diff_plans(prev_plans.get(label), plans[label],
+                               N_RANKS)
+            print(f"    delta vs previous batch: {delta.summary()}")
+            prev_plans[label] = plans[label]
         static_t = plans[LINEUP[0][0]].total_time_est
         print(f"\n  speedup faithful: "
               f"{static_t / plans[LINEUP[1][0]].total_time_est:.2f}x,"

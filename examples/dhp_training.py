@@ -47,6 +47,12 @@ def main():
     ap.add_argument("--layers", type=int, default=None)
     ap.add_argument("--vocab", type=int, default=None)
     ap.add_argument("--compare-static", action="store_true")
+    ap.add_argument("--save-plans", metavar="PATH", default=None,
+                    help="write the executed Plan-IR trace to PATH")
+    ap.add_argument("--replay-plans", metavar="PATH", default=None,
+                    help="replay a saved trace (bit-identical groups)")
+    ap.add_argument("--no-lookahead", action="store_true",
+                    help="plan synchronously (disable the pipeline)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced().with_(family="dense", vlm=None)
@@ -63,7 +69,14 @@ def main():
         cfg = cfg.with_(**over)
 
     cluster = ClusterSpec.auto(mem_budget=args.mem_budget)
-    engine = Engine(cfg, cluster, strategy=args.strategy)
+    if args.replay_plans:
+        from repro.api import ReplayStrategy, load_plans
+        strategy = ReplayStrategy(plans=load_plans(args.replay_plans))
+        args.steps = min(args.steps, len(strategy))
+        print(f"replaying {args.steps} plans from {args.replay_plans}")
+    else:
+        strategy = args.strategy
+    engine = Engine(cfg, cluster, strategy=strategy)
     print(f"devices={cluster.n_devices} arch={cfg.arch_id} "
           f"L={cfg.n_layers} d={cfg.d_model}")
     n_params = sum(p.size for p in jax.tree.leaves(engine.state.params))
@@ -88,12 +101,21 @@ def main():
               f"(loss={dm.loss:.4f})")
 
     t_start = time.perf_counter()
+    plan_log = [] if args.save_plans else None
     history = engine.train(
         steps=args.steps, dataset=args.dataset, global_batch=args.gbs,
-        max_tokens=args.max_tokens, log=print)
+        max_tokens=args.max_tokens,
+        lookahead=not args.no_lookahead, plan_log=plan_log, log=print)
     total = time.perf_counter() - t_start
+    hits = sum(m.plan_cache_hit for m in history)
+    hidden = sum(m.plan_overlap_ms for m in history)
     print(f"\n{len(history)} steps in {total:.1f}s; "
+          f"plan cache hits {hits}, {hidden:.1f}ms planning hidden; "
           f"executable pool: {engine.executor.pool.stats}")
+    if plan_log is not None:
+        from repro.api import save_plans
+        save_plans(args.save_plans, plan_log)
+        print(f"saved {len(plan_log)} plans -> {args.save_plans}")
 
 
 if __name__ == "__main__":

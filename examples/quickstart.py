@@ -47,6 +47,16 @@ def main():
                            global_batch=4, max_tokens=256, log=print)
     print(f"loss {history[0].loss:.4f} -> {history[-1].loss:.4f}")
 
+    # 3b. Plan-IR telemetry: how much planning the lookahead pipeline
+    # hid, how often recurring batch shapes skipped the solver, and how
+    # many communication-group slots actually had to be (re)created.
+    hits = sum(m.plan_cache_hit for m in history)
+    hidden = sum(m.plan_overlap_ms for m in history)
+    reconf = sum(m.groups_reconfigured for m in history)
+    print(f"plan cache hits {hits}/{len(history)}, "
+          f"{hidden:.1f}ms planning hidden by lookahead, "
+          f"{reconf} group slots reconfigured")
+
     # 4. decode a few tokens from the trained weights
     toks, report = engine.serve(batch=4, prompt_len=32, gen_tokens=8)
     print(f"decoded token ids: {[int(t) for t in toks[0]]} "

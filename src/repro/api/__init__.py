@@ -14,18 +14,24 @@ Strategies are registry entries — `get_strategy("dhp")`,
 `get_strategy("oracle")` — so adding a parallelism policy is one class
 with a `@register_strategy` decorator, not a new driver.
 """
+from ..core.scheduler import (PLAN_IR_VERSION, ExecutionPlan, GroupDelta,
+                              PlanCache, PlanValidationError, diff_plans,
+                              load_plans, save_plans)
 from .cluster import ClusterSpec
 from .engine import Engine, Session, StepMetrics, demo_cost_model
 from .strategies import (STRATEGY_REGISTRY, BruteForceStrategy,
                          DHPStrategy, MeasuredCostModel, OracleStrategy,
-                         StaticStrategy, Strategy, available_strategies,
-                         get_strategy, register_strategy)
+                         ReplayStrategy, StaticStrategy, Strategy,
+                         available_strategies, get_strategy,
+                         register_strategy)
 
 __all__ = [
     "ClusterSpec",
     "Engine", "Session", "StepMetrics", "demo_cost_model",
     "Strategy", "StaticStrategy", "DHPStrategy", "BruteForceStrategy",
-    "OracleStrategy", "MeasuredCostModel",
+    "OracleStrategy", "MeasuredCostModel", "ReplayStrategy",
     "STRATEGY_REGISTRY", "available_strategies", "get_strategy",
     "register_strategy",
+    "PLAN_IR_VERSION", "ExecutionPlan", "GroupDelta", "PlanCache",
+    "PlanValidationError", "diff_plans", "save_plans", "load_plans",
 ]

@@ -6,15 +6,22 @@ One loop, every strategy:
   repro-train --arch internvl3-2b --strategy dhp --steps 20 --reduced
   repro-train --arch internvl3-2b --strategy static --steps 20 --reduced
   repro-train --list-strategies
+
+Plan IR persistence (docs/api.md "Plan IR & replay"):
+
+  repro-train --steps 10 --save-plans plans.json     # record the trace
+  repro-train --replay-plans plans.json              # bit-identical rerun
 """
 from __future__ import annotations
 
 import argparse
 from typing import List, Optional
 
+from ..core.scheduler import load_plans, save_plans
 from .cluster import ClusterSpec
 from .engine import Engine, StepMetrics
-from .strategies import available_strategies, get_strategy
+from .strategies import (ReplayStrategy, available_strategies,
+                         get_strategy)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -44,6 +51,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-rank activation budget in tokens (demo)")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--list-strategies", action="store_true")
+    ap.add_argument("--save-plans", metavar="PATH", default=None,
+                    help="write the executed plan trace (Plan IR v2 "
+                    "JSON) to PATH for later --replay-plans")
+    ap.add_argument("--replay-plans", metavar="PATH", default=None,
+                    help="replay a saved plan trace instead of "
+                    "planning (bit-identical group assignments)")
+    ap.add_argument("--no-lookahead", action="store_true",
+                    help="disable the planner pipeline: plan each "
+                    "batch synchronously before executing it")
     return ap
 
 
@@ -52,13 +68,18 @@ def make_engine(args, default_strategy: str = "dhp") -> Engine:
     deprecated launch.train shims)."""
     from ..training.optimizer import AdamW, cosine_schedule
 
-    strategy = (getattr(args, "strategy", None)
+    replay = getattr(args, "replay_plans", None)
+    if replay:
+        strategy = ReplayStrategy(plans=load_plans(replay))
+    else:
+        name = (getattr(args, "strategy", None)
                 or getattr(args, "mode", None) or default_strategy)
+        strategy = get_strategy(name)
     cluster = ClusterSpec.auto(mem_budget=args.mem_budget)
     return Engine(
         args.arch,
         cluster,
-        strategy=get_strategy(strategy),
+        strategy=strategy,
         optimizer=AdamW(lr=cosine_schedule(args.lr, 10, args.steps)),
         reduced=args.reduced,
         seed=args.seed,
@@ -70,10 +91,25 @@ def run(args, default_strategy: str = "dhp") -> List[StepMetrics]:
     engine = make_engine(args, default_strategy)
     print(f"arch={engine.cfg.arch_id} strategy={engine.strategy.name} "
           f"ranks={engine.cluster.n_replicas}")
+    steps = args.steps
+    if getattr(args, "replay_plans", None):
+        steps = min(steps, len(engine.strategy))
+        print(f"replaying {steps} recorded plans from "
+              f"{args.replay_plans}")
+    plan_log: Optional[list] = (
+        [] if getattr(args, "save_plans", None) else None)
     history = engine.train(
-        steps=args.steps, dataset=args.dataset,
-        global_batch=args.batch, max_tokens=args.seq_len, log=print)
+        steps=steps, dataset=args.dataset,
+        global_batch=args.batch, max_tokens=args.seq_len,
+        lookahead=not getattr(args, "no_lookahead", False),
+        plan_log=plan_log, log=print)
     print("executable pool:", engine.executor.pool.stats)
+    cache = engine.strategy.plan_cache
+    if cache is not None:
+        print("plan cache:", cache.stats)
+    if plan_log is not None:
+        save_plans(args.save_plans, plan_log)
+        print(f"saved {len(plan_log)} plans -> {args.save_plans}")
     if args.checkpoint:
         engine.save_checkpoint(args.checkpoint)
         print("saved", args.checkpoint)

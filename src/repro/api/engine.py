@@ -25,7 +25,7 @@ from ..configs import get_config
 from ..configs.base import ModelConfig
 from ..core.cost_model import CostModel, SeqInfo, analytic_coeffs
 from ..core.executor import DHPExecutor
-from ..core.scheduler import ExecutionPlan
+from ..core.scheduler import ExecutionPlan, diff_plans
 from ..data.pipeline import HeterogeneousLoader, RaggedBatch
 from .cluster import ClusterSpec
 from .strategies import Strategy, get_strategy
@@ -51,11 +51,21 @@ class StepMetrics:
     padding_efficiency: float = 1.0
     #: executables compiled during this step (0 once the pool is warm)
     exe_misses: int = 0
+    #: True when the plan came from the strategy's PlanCache (the DP
+    #: solver was skipped for a recurring batch shape)
+    plan_cache_hit: bool = False
+    #: group slots created/resized vs the previous plan (GroupDelta)
+    groups_reconfigured: int = 0
+    #: planning latency hidden behind device execution by the lookahead
+    #: pipeline (schedule_ms minus the time collect() actually blocked)
+    plan_overlap_ms: float = 0.0
 
     def summary(self) -> str:
+        cached = " cached" if self.plan_cache_hit else ""
         return (f"step {self.step:3d} loss={self.loss:.4f} "
                 f"degrees={self.degree_histogram} "
-                f"sched={self.schedule_ms:.1f}ms "
+                f"sched={self.schedule_ms:.1f}ms{cached} "
+                f"reconf={self.groups_reconfigured} "
                 f"({self.step_time_s:.2f}s)")
 
 
@@ -115,6 +125,7 @@ class Engine:
         self._executor: Optional[DHPExecutor] = None
         self._apply_update = None
         self._step = 0
+        self._prev_plan: Optional[ExecutionPlan] = None
 
     # -- lazy heavyweight pieces ----------------------------------------
     @property
@@ -167,6 +178,14 @@ class Engine:
 
         if measure is None:
             measure = self.strategy.wants_measurement
+        # Group-reconfiguration delta vs the previously executed plan:
+        # the pool consumes it (reused slots cost nothing, new/resized
+        # slots are created) instead of re-deriving every group.
+        if plan.delta is None:
+            plan.delta = diff_plans(self._prev_plan, plan,
+                                    self.cluster.n_replicas)
+        self.executor.pool.reconfigure(plan.delta)
+        self._prev_plan = plan
         timings: Optional[List[dict]] = [] if measure else None
         t0 = time.perf_counter()
         loss, grads = self.executor.run_plan(self.state.params, plan,
@@ -200,6 +219,8 @@ class Engine:
             padding_efficiency=self.executor.last_run_stats.get(
                 "padding_efficiency", 1.0),
             exe_misses=self.executor.last_run_stats.get("exe_misses", 0),
+            plan_cache_hit=plan.from_cache,
+            groups_reconfigured=plan.delta.n_reconfigured,
         )
         self._step += 1
         return metrics
@@ -208,30 +229,58 @@ class Engine:
     def train(self, loader: Optional[Iterable[RaggedBatch]] = None, *,
               steps: int = 10, dataset: str = "openvid",
               global_batch: int = 8, max_tokens: int = 512,
-              tokens_per_frame: int = 16,
+              tokens_per_frame: int = 16, lookahead: bool = True,
+              plan_log: Optional[List[ExecutionPlan]] = None,
               log=None) -> List[StepMetrics]:
         """The single training driver: heterogeneous batches -> strategy
-        plan -> executor, with next-batch planning overlapped on a host
-        thread. Every strategy (static baselines included) runs through
-        this one loop."""
+        plan -> executor. Every strategy (static baselines included)
+        runs through this one loop.
+
+        `lookahead=True` (default) runs the planner pipeline: a
+        background host thread plans batch t+1 while devices execute
+        batch t, and `StepMetrics.plan_overlap_ms` reports how much
+        planning latency that hid. `lookahead=False` is the synchronous
+        baseline — plan, then execute, back to back.
+
+        `plan_log`: pass a list to receive every executed ExecutionPlan
+        (the `--save-plans` trace)."""
         if loader is None:
             loader = HeterogeneousLoader(
                 dataset, global_batch, self.cfg.vocab, seed=self.seed,
                 max_tokens=max_tokens, tokens_per_frame=tokens_per_frame)
         it: Iterator[RaggedBatch] = iter(loader)
 
-        data = next(it)
-        self.strategy.prepare(data.infos)
+        try:
+            data = next(it)
+        except StopIteration:
+            return []
+        if lookahead:
+            self.strategy.prepare(data.infos)
         history: List[StepMetrics] = []
-        for _ in range(steps):
-            plan = self.strategy.collect()
+        for i in range(steps):
+            if lookahead:
+                plan = self.strategy.collect()
+                overlap = max(
+                    0.0, plan.schedule_ms - self.strategy.last_wait_ms)
+            else:
+                plan = self.strategy.plan(data.infos)
+                overlap = 0.0
             next_data = None
-            try:
-                next_data = next(it)
-                self.strategy.prepare(next_data.infos)  # overlap
-            except StopIteration:
-                pass
+            if i < steps - 1:
+                # Only prefetch while another step remains: consuming a
+                # batch (or popping a replay plan) that will never
+                # execute would desync resumable loaders and
+                # ReplayStrategy's cursor.
+                try:
+                    next_data = next(it)
+                    if lookahead:
+                        self.strategy.prepare(next_data.infos)  # overlap
+                except StopIteration:
+                    pass
             metrics = self.execute(plan, data)
+            metrics.plan_overlap_ms = overlap
+            if plan_log is not None:
+                plan_log.append(plan)
             history.append(metrics)
             if log is not None:
                 log(metrics.summary())
@@ -257,7 +306,7 @@ class Engine:
 
         from ..models.model import (init_cache, prefill,
                                     prefill_cross_kv)
-        from ..serving.serve_step import greedy_generate
+        from ..serving.serve_step import greedy_generate, make_serve_step
 
         if prompts is None:
             prompts = jax.random.randint(
@@ -285,9 +334,16 @@ class Engine:
             first = prompts[:, -1].astype(jnp.int32)
         t_prefill = time.perf_counter() - t0
 
+        # The decode step lives in the cluster's shared executable pool
+        # (same cache the training groups use), keyed on the shapes that
+        # force recompilation — repeat serve calls skip the jit.
+        step, step_miss = self.cluster.pool().executable_for(
+            ("serve", self.cfg.arch_id, self.cfg.family, batch,
+             cache_len),
+            lambda: jax.jit(make_serve_step(self.cfg)))
         t0 = time.perf_counter()
         out, cache = greedy_generate(self.state.params, self.cfg, cache,
-                                     first, gen_tokens)
+                                     first, gen_tokens, step=step)
         t_decode = time.perf_counter() - t0
         report = {
             "prefill_s": t_prefill,
@@ -295,6 +351,7 @@ class Engine:
             "ms_per_token": t_decode / max(gen_tokens, 1) * 1e3,
             "batch": batch,
             "prompt_len": prompt_len,
+            "exe_miss": step_miss,
         }
         return out, report
 

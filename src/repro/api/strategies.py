@@ -19,12 +19,15 @@ from __future__ import annotations
 
 import concurrent.futures
 import threading
-from typing import Callable, Dict, List, Optional, Sequence as Seq, Tuple
+import time
+from typing import (Callable, Dict, List, Optional, Sequence as Seq,
+                    Tuple, Union)
 
-from ..core.allocator import allocate_bruteforce
+from ..core.allocator import allocate_bruteforce, evaluate_degrees
 from ..core.cost_model import CostModel, SeqInfo
 from ..core.group_pool import pow2_bucket
-from ..core.scheduler import DHPScheduler, ExecutionPlan, static_plan
+from ..core.scheduler import (DHPScheduler, ExecutionPlan, PlanCache,
+                              static_plan)
 
 # name -> (class, constructor defaults). Aliases ("megatron") are just
 # extra entries with different defaults.
@@ -76,13 +79,25 @@ class Strategy:
 
     def __init__(self, cost_model: Optional[CostModel] = None,
                  n_ranks: Optional[int] = None,
-                 mem_budget: Optional[float] = None):
+                 mem_budget: Optional[float] = None,
+                 plan_cache: Union[None, bool, PlanCache] = None):
+        """`plan_cache` controls cross-batch plan reuse: True/None
+        enables the structural-histogram PlanCache (None defers to the
+        class default — off for measuring strategies, whose cost model
+        drifts under observation), False disables it, or pass a
+        PlanCache instance to share one across strategies."""
         self.cm = cost_model
         self.n_ranks = n_ranks
         self.budget = mem_budget
+        self._plan_cache_opt = plan_cache
+        self._cache: Optional[PlanCache] = (
+            plan_cache if isinstance(plan_cache, PlanCache) else None)
         self._executor: Optional[
             concurrent.futures.ThreadPoolExecutor] = None
         self._pending: Optional[concurrent.futures.Future] = None
+        #: ms collect() actually blocked waiting for the background
+        #: planner — the NON-hidden share of schedule_ms.
+        self.last_wait_ms: float = 0.0
 
     # -- binding ---------------------------------------------------------
     @property
@@ -113,10 +128,35 @@ class Strategy:
                 f".bind(cost_model, n_ranks, mem_budget) or hand it to "
                 f"an Engine first")
 
+    # -- plan cache ------------------------------------------------------
+    @property
+    def plan_cache(self) -> Optional[PlanCache]:
+        """The strategy's PlanCache, or None when caching is off."""
+        if self._cache is None and self._plan_cache_opt is not False:
+            if self._plan_cache_opt is None and self.wants_measurement:
+                return None     # measured costs drift; never serve stale
+            self._cache = PlanCache()
+        return self._cache
+
     # -- planning --------------------------------------------------------
     def plan(self, seqs: Seq[SeqInfo]) -> ExecutionPlan:
         self._require_bound()
-        plan = self._plan(list(seqs))
+        seqs = list(seqs)
+        t0 = time.perf_counter()
+        cache = self.plan_cache
+        plan = None
+        if cache is not None:
+            plan = cache.lookup(seqs, cost_model=self.cm,
+                                n_ranks=self.n_ranks,
+                                mem_budget=self.budget)
+            if plan is not None:
+                ms = (time.perf_counter() - t0) * 1e3
+                plan.schedule_ms = ms
+                plan.stage_ms = {"cache": ms}
+        if plan is None:
+            plan = self._plan(seqs)
+            if cache is not None:
+                cache.store(seqs, plan)
         plan.strategy_name = self.name
         return plan
 
@@ -132,10 +172,16 @@ class Strategy:
         self._pending = self._executor.submit(self.plan, list(seqs))
 
     def collect(self) -> ExecutionPlan:
-        """Block until the prepared plan is ready (usually already is)."""
+        """Block until the prepared plan is ready (usually already is).
+
+        Records `last_wait_ms`, the time this call actually blocked —
+        `schedule_ms - last_wait_ms` is the planning latency hidden
+        behind device execution (StepMetrics.plan_overlap_ms)."""
         if self._pending is None:
             raise RuntimeError("collect() without a prior prepare()")
+        t0 = time.perf_counter()
         plan = self._pending.result()
+        self.last_wait_ms = (time.perf_counter() - t0) * 1e3
         self._pending = None
         return plan
 
@@ -165,8 +211,9 @@ class StaticStrategy(Strategy):
     rounding (§4.1)."""
 
     def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
-                 degree: Optional[int] = None, power_of_two: bool = False):
-        super().__init__(cost_model, n_ranks, mem_budget)
+                 degree: Optional[int] = None, power_of_two: bool = False,
+                 plan_cache=None):
+        super().__init__(cost_model, n_ranks, mem_budget, plan_cache)
         self.degree = degree
         self.power_of_two = power_of_two
 
@@ -186,8 +233,9 @@ class DHPStrategy(Strategy):
     def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
                  use_all_ranks: bool = True, balance_packing: bool = True,
                  serial_fallback: bool = True,
-                 allocator: Optional[Callable] = None):
-        super().__init__(cost_model, n_ranks, mem_budget)
+                 allocator: Optional[Callable] = None,
+                 plan_cache=None):
+        super().__init__(cost_model, n_ranks, mem_budget, plan_cache)
         self.options = dict(use_all_ranks=use_all_ranks,
                             balance_packing=balance_packing,
                             serial_fallback=serial_fallback,
@@ -216,11 +264,12 @@ class BruteForceStrategy(DHPStrategy):
     waves; used by tests and regret analyses)."""
 
     def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
-                 balance_packing: bool = True):
+                 balance_packing: bool = True, plan_cache=None):
         super().__init__(cost_model, n_ranks, mem_budget,
                          balance_packing=balance_packing,
                          serial_fallback=False,
-                         allocator=allocate_bruteforce)
+                         allocator=allocate_bruteforce,
+                         plan_cache=plan_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -293,11 +342,12 @@ class OracleStrategy(DHPStrategy):
 
     def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
                  use_all_ranks: bool = True, balance_packing: bool = True,
-                 serial_fallback: bool = True):
+                 serial_fallback: bool = True, plan_cache=None):
         super().__init__(cost_model, n_ranks, mem_budget,
                          use_all_ranks=use_all_ranks,
                          balance_packing=balance_packing,
-                         serial_fallback=serial_fallback)
+                         serial_fallback=serial_fallback,
+                         plan_cache=plan_cache)
 
     def bind(self, cost_model, n_ranks, mem_budget):
         if self.cm is None and not isinstance(cost_model,
@@ -325,8 +375,46 @@ class OracleStrategy(DHPStrategy):
         by_id = {s.seq_id: s for s in seqs}
         total = 0.0
         for mb in plan.micro_batches:
-            total += max(
-                self.measured.group_time(
-                    [by_id[i] for i in g.seq_ids], g.degree)
-                for g in mb.groups)
+            total += evaluate_degrees(
+                [[by_id[i] for i in g.seq_ids] for g in mb.groups],
+                [g.degree for g in mb.groups],
+                self.measured.group_time).makespan
         return total
+
+
+# ---------------------------------------------------------------------------
+class ReplayStrategy(Strategy):
+    """Replays a saved plan trace instead of planning.
+
+    Constructed directly (NOT in the registry — it is parameterized by
+    the plans to replay): `ReplayStrategy(plans=load_plans(path))`, or
+    via `repro-train --replay-plans plans.json`. Each `plan()` call pops
+    the next recorded plan and validates its seq-id coverage against the
+    batch it is about to execute, so a drifted data stream fails loudly
+    instead of silently misassigning sequences. Replay is bit-identical:
+    structural hashes, rank slots and executable keys match the run the
+    plans were saved from (given the same loader seed/state).
+    """
+
+    name = "replay"
+
+    def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
+                 plans: Optional[Seq[ExecutionPlan]] = None):
+        super().__init__(cost_model, n_ranks, mem_budget,
+                         plan_cache=False)
+        self._plans = list(plans or [])
+        self._cursor = 0
+
+    def __len__(self) -> int:
+        return len(self._plans) - self._cursor
+
+    def _plan(self, seqs):
+        if self._cursor >= len(self._plans):
+            raise RuntimeError(
+                f"replay exhausted after {len(self._plans)} plans")
+        recorded = self._plans[self._cursor]
+        self._cursor += 1
+        if isinstance(recorded, dict):
+            recorded = ExecutionPlan.from_json(recorded)
+        recorded.validate(seqs, n_ranks=self.n_ranks)
+        return recorded

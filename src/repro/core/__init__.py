@@ -8,7 +8,8 @@ Public API:
   Profiler                                      (coefficient fitting)
   ClusterSimulator / end_to_end_table           (paper-table reproduction)
 """
-from .allocator import Allocation, allocate, allocate_bruteforce
+from .allocator import (Allocation, allocate, allocate_bruteforce,
+                        evaluate_degrees)
 from .cost_model import (CostCoeffs, CostModel, Hardware, SeqInfo,
                          analytic_coeffs)
 from .distributions import DATASETS, sample_batch
@@ -17,12 +18,16 @@ from .group_pool import (BUCKET_LADDERS, GroupPool, make_bucket_fn,
 from .packing import (AtomicGroup, flatten_group, pack_sequences,
                       packing_efficiency, validate_packing)
 from .profiler import Profiler, profiling_grid
-from .scheduler import (DHPScheduler, ExecutionPlan, GroupPlan,
-                        MicroBatchPlan, MicroBatchPlanner, static_plan)
+from .scheduler import (PLAN_IR_VERSION, DHPScheduler, ExecutionPlan,
+                        GroupDelta, GroupPlan, MicroBatchPlan,
+                        MicroBatchPlanner, PlanCache,
+                        PlanValidationError, diff_plans, load_plans,
+                        plans_from_json, plans_to_json, save_plans,
+                        static_plan)
 from .simulator import ClusterSimulator, end_to_end_table, scaling_table
 
 __all__ = [
-    "Allocation", "allocate", "allocate_bruteforce",
+    "Allocation", "allocate", "allocate_bruteforce", "evaluate_degrees",
     "CostCoeffs", "CostModel", "Hardware", "SeqInfo", "analytic_coeffs",
     "DATASETS", "sample_batch",
     "AtomicGroup", "pack_sequences", "validate_packing",
@@ -31,5 +36,8 @@ __all__ = [
     "Profiler", "profiling_grid",
     "DHPScheduler", "ExecutionPlan", "GroupPlan", "MicroBatchPlan",
     "MicroBatchPlanner", "static_plan",
+    "PLAN_IR_VERSION", "GroupDelta", "PlanCache",
+    "PlanValidationError", "diff_plans",
+    "plans_to_json", "plans_from_json", "save_plans", "load_plans",
     "ClusterSimulator", "end_to_end_table", "scaling_table",
 ]

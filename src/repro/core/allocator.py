@@ -110,6 +110,26 @@ def allocate(
                       ranks_used=sum(degrees), solver_ms=ms)
 
 
+def evaluate_degrees(
+    seq_groups: Seq[Seq],
+    degrees: Seq[int],
+    time_fn: TimeFn,
+) -> Allocation:
+    """Evaluate a FIXED degree vector — the no-search path.
+
+    Used when the degrees are already known (a cached or replayed plan
+    names them), by OracleStrategy.plan_cost to price any plan under
+    measured costs, and by tests to certify the DP's reported makespan
+    equals the evaluation of its own degree vector.
+    """
+    t0 = time.perf_counter()
+    times = [time_fn(seqs, d) for seqs, d in zip(seq_groups, degrees)]
+    ms = (time.perf_counter() - t0) * 1e3
+    return Allocation(degrees=list(degrees),
+                      makespan=max(times, default=0.0),
+                      ranks_used=sum(degrees), solver_ms=ms)
+
+
 def allocate_bruteforce(
     groups: Seq[AtomicGroup],
     n_ranks: int,

@@ -106,6 +106,10 @@ class DHPExecutor:
         self.packed = packed
         #: padding/compile telemetry of the most recent run_plan()
         self.last_run_stats: Dict[str, float] = {}
+        #: executable-pool keys dispatched by the most recent run_plan(),
+        #: in dispatch order — the replay bit-identity witness (a plan
+        #: saved with --save-plans must reproduce these exactly).
+        self.last_exe_keys: List[Tuple] = []
 
     # ------------------------------------------------------------------
     def _build_grad_fn(self, mesh):
@@ -142,20 +146,24 @@ class DHPExecutor:
         return build
 
     def _group_grad_fn(self, start: int, degree: int, n_seqs: int,
-                       bucket: int) -> Tuple[Any, bool]:
+                       bucket: int) -> Tuple[Any, bool, Tuple]:
         """Per-sequence-padded step for one CP group shape (legacy path:
         the executable key still depends on n_seqs)."""
         mesh = self.pool.mesh_for(start, degree)
         key = ("grad", start, degree, n_seqs, bucket)
-        return self.pool.executable_for(key, self._build_grad_fn(mesh))
+        exe, miss = self.pool.executable_for(key,
+                                             self._build_grad_fn(mesh))
+        return exe, miss, key
 
     def _packed_grad_fn(self, start: int, degree: int,
-                        bucket: int) -> Tuple[Any, bool]:
+                        bucket: int) -> Tuple[Any, bool, Tuple]:
         """Packed varlen step: ONE [1, bucket] buffer regardless of how
         many sequences the group holds — n_seqs is gone from the key."""
         mesh = self.pool.mesh_for(start, degree)
         key = ("pgrad", start, degree, bucket)
-        return self.pool.executable_for(key, self._build_grad_fn(mesh))
+        exe, miss = self.pool.executable_for(key,
+                                             self._build_grad_fn(mesh))
+        return exe, miss, key
 
     # ------------------------------------------------------------------
     def _group_batch(self, seqs, degree: int):
@@ -197,28 +205,26 @@ class DHPExecutor:
         loss_acc = 0.0
         agg = {"real_tokens": 0, "padded_tokens": 0, "exe_misses": 0,
                "groups": 0}
+        # Rank slots come from the plan IR itself (including the
+        # defensive wrap for oversubscribed micro-batches) so executor,
+        # GroupDelta diffing and replay equality all agree on which rank
+        # slice a group runs on.
+        slots = iter(plan.group_slots(self.pool.n_replicas))
+        self.last_exe_keys = []
         for mb in plan.micro_batches:
-            start = 0
             handles = []
             for g in mb.groups:
-                if start + g.degree > self.pool.n_replicas:
-                    # Defensive fallback for (custom) plans whose
-                    # micro-batch oversubscribes the rank budget
-                    # (Eq. 6): wrap the cursor so execution proceeds.
-                    # Numerics are unaffected, but wrapped groups share
-                    # devices with earlier ones and only same-slice
-                    # groups serialise — well-formed plans (all built-in
-                    # strategies) never take this branch.
-                    start = 0
+                _, _, start, _ = next(slots)
                 seqs = [data.by_id(i) for i in g.seq_ids]
                 np_batch, real, padded, bucket = self._group_batch(
                     seqs, g.degree)
                 if self.packed:
-                    step, compiled = self._packed_grad_fn(
+                    step, compiled, key = self._packed_grad_fn(
                         start, g.degree, bucket)
                 else:
-                    step, compiled = self._group_grad_fn(
+                    step, compiled, key = self._group_grad_fn(
                         start, g.degree, len(seqs), bucket)
+                self.last_exe_keys.append(key)
                 batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
                 n_tok = float(np_batch["mask"].sum())
                 agg["real_tokens"] += real
@@ -242,7 +248,6 @@ class DHPExecutor:
                         "padding_efficiency": real / max(padded, 1),
                     })
                     handles.append((out, n_tok))
-                start += g.degree
             for (loss, grads), n_tok in handles:
                 w = n_tok
                 total_tokens += w

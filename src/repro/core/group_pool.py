@@ -84,6 +84,9 @@ class PoolStats:
     exe_hits: int = 0
     exe_misses: int = 0
     exe_evictions: int = 0
+    #: group slots (re)created because a GroupDelta named them as new or
+    #: resized relative to the previous plan (see `reconfigure`).
+    groups_reconfigured: int = 0
 
 
 class GroupPool:
@@ -152,6 +155,24 @@ class GroupPool:
             self._exes.popitem(last=False)
             self.stats.exe_evictions += 1
         return exe, True
+
+    # ------------------------------------------------------------------
+    def reconfigure(self, delta) -> Dict[str, int]:
+        """Apply a plan's GroupDelta: pre-create meshes for the slots the
+        delta names as `created`/`resized` and count `reused` slots as
+        zero-cost pool hits — the pool consumes the delta instead of
+        re-deriving every group from scratch per plan (§5 (1)).
+
+        Returns {created, resized, reused} counts for telemetry."""
+        if delta is None:
+            return {"created": 0, "resized": 0, "reused": 0}
+        for start, degree in list(delta.created) + list(delta.resized):
+            if start + degree <= self.n_replicas:
+                self.mesh_for(start, degree)
+        self.stats.groups_reconfigured += delta.n_reconfigured
+        return {"created": len(delta.created),
+                "resized": len(delta.resized),
+                "reused": len(delta.reused)}
 
     def __len__(self) -> int:
         return len(self._exes)

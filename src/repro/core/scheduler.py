@@ -15,12 +15,27 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import hashlib
+import json
+import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence as Seq
+from collections import OrderedDict
+from typing import (Any, Callable, Dict, List, Optional, Sequence as Seq,
+                    Tuple)
 
 from .allocator import Allocation, allocate
 from .cost_model import CostModel, SeqInfo
 from .packing import AtomicGroup, pack_sequences
+
+#: Plan IR version stamped into every serialized plan. v1 was the
+#: in-memory-only dataclass of PR 1; v2 adds to_json/from_json,
+#: structural hashing, GroupDelta and validation.
+PLAN_IR_VERSION = 2
+
+
+class PlanValidationError(ValueError):
+    """An ExecutionPlan violated a scheduling invariant (Eq. 3/6 or
+    seq-id coverage)."""
 
 
 @dataclasses.dataclass
@@ -32,12 +47,81 @@ class GroupPlan:
     est_time: float
     tokens: int
 
+    def to_json(self) -> dict:
+        return {"seq_ids": list(self.seq_ids), "degree": self.degree,
+                "est_time": self.est_time, "tokens": self.tokens}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "GroupPlan":
+        return cls(seq_ids=[int(i) for i in obj["seq_ids"]],
+                   degree=int(obj["degree"]),
+                   est_time=float(obj["est_time"]),
+                   tokens=int(obj["tokens"]))
+
 
 @dataclasses.dataclass
 class MicroBatchPlan:
     groups: List[GroupPlan]
     makespan: float            # max est_time (the DP objective, Eq. 2)
     ranks_used: int
+
+    def to_json(self) -> dict:
+        return {"groups": [g.to_json() for g in self.groups],
+                "makespan": self.makespan, "ranks_used": self.ranks_used}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "MicroBatchPlan":
+        return cls(groups=[GroupPlan.from_json(g) for g in obj["groups"]],
+                   makespan=float(obj["makespan"]),
+                   ranks_used=int(obj["ranks_used"]))
+
+
+@dataclasses.dataclass
+class GroupDelta:
+    """What changed in the communication-group layout vs the PREVIOUS
+    plan.
+
+    Groups are named by their (start, degree) rank slot — the same key
+    the GroupPool caches meshes/executables under — so a delta tells the
+    pool exactly which artifacts to reuse and which to (re)create:
+
+      reused   — slot occupied by both plans (zero reconfiguration cost);
+      resized  — start rank kept, CP degree changed (new ring size);
+      created  — slot that did not exist in the previous plan;
+      released — previous slot whose start rank the new plan leaves
+                 entirely (kept pooled, not destroyed).
+    """
+
+    created: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)
+    reused: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)
+    resized: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)
+    released: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def n_reconfigured(self) -> int:
+        """Slots needing (re)creation — the paper's per-batch group
+        setup cost the pool amortises."""
+        return len(self.created) + len(self.resized)
+
+    def summary(self) -> str:
+        return (f"groups: {len(self.reused)} reused, "
+                f"{len(self.created)} created, "
+                f"{len(self.resized)} resized, "
+                f"{len(self.released)} released")
+
+    def to_json(self) -> dict:
+        return {k: [list(s) for s in getattr(self, k)]
+                for k in ("created", "reused", "resized", "released")}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "GroupDelta":
+        return cls(**{k: [tuple(int(x) for x in s) for s in obj[k]]
+                      for k in ("created", "reused", "resized",
+                                "released")})
 
 
 @dataclasses.dataclass
@@ -51,6 +135,11 @@ class ExecutionPlan:
     # per-stage scheduling latency, e.g. {"microbatch": .., "pack": ..,
     # "allocate": ..} — lets benchmarks attribute plan cost per stage
     # and per strategy from one code path.
+    version: int = PLAN_IR_VERSION
+    from_cache: bool = False   # True when a PlanCache hit produced this
+    delta: Optional[GroupDelta] = None
+    # group reconfiguration vs the previously executed plan; filled by
+    # diff_plans (the Engine does it automatically before execution).
 
     @property
     def n_groups(self) -> int:
@@ -64,6 +153,303 @@ class ExecutionPlan:
             for g in mb.groups:
                 h[g.degree] = h.get(g.degree, 0) + 1
         return dict(sorted(h.items(), reverse=True))
+
+    # -- rank-slot geometry ---------------------------------------------
+    def group_slots(self, n_ranks: int) -> List[Tuple[int, int, int, int]]:
+        """(mb_index, group_index, start_rank, degree) per group, using
+        the SAME cursor rule as the executor (including the defensive
+        wrap for oversubscribed micro-batches) — the single source of
+        truth for which rank slice a group runs on, shared by the
+        executor, diff_plans and replay equality checks."""
+        slots = []
+        for mi, mb in enumerate(self.micro_batches):
+            start = 0
+            for gi, g in enumerate(mb.groups):
+                if start + g.degree > n_ranks:
+                    start = 0
+                slots.append((mi, gi, start, g.degree))
+                start += g.degree
+        return slots
+
+    # -- structural identity --------------------------------------------
+    def structural_hash(self) -> str:
+        """Stable digest of the plan STRUCTURE (micro-batch tree of
+        (seq_ids, degree)); timings, strategy attribution and telemetry
+        are excluded, so a replayed plan hashes identically to the plan
+        it was saved from."""
+        tree = [[[list(g.seq_ids), g.degree] for g in mb.groups]
+                for mb in self.micro_batches]
+        # structure only — no version salt, so a future IR bump keeps
+        # accepting (and hash-verifying) traces saved by older versions
+        blob = json.dumps(tree, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    # -- invariants ------------------------------------------------------
+    def validate(self, seqs: Optional[Seq[SeqInfo]] = None, *,
+                 n_ranks: Optional[int] = None,
+                 cost_model: Optional[CostModel] = None,
+                 mem_budget: Optional[float] = None) -> "ExecutionPlan":
+        """Check scheduling invariants; raises PlanValidationError.
+
+        Checks are keyed to what context is supplied:
+          * always        — degrees >= 1, non-empty groups;
+          * `n_ranks`     — wave feasibility, Eq. 6: per micro-batch
+                            sum(degrees) <= N and each degree <= N;
+          * `seqs`        — coverage: every seq_id scheduled exactly once;
+          * `seqs` + `cost_model` + `mem_budget`
+                          — memory, Eq. 3: M(C_p) <= E * d_p per group.
+        Returns self so call sites can chain."""
+        by_id = {s.seq_id: s for s in seqs} if seqs is not None else None
+        seen: Dict[int, int] = {}
+        for mi, mb in enumerate(self.micro_batches):
+            wave_degrees = 0
+            for g in mb.groups:
+                if g.degree < 1:
+                    raise PlanValidationError(
+                        f"mb{mi}: group degree {g.degree} < 1")
+                if not g.seq_ids:
+                    raise PlanValidationError(f"mb{mi}: empty group")
+                wave_degrees += g.degree
+                for i in g.seq_ids:
+                    seen[i] = seen.get(i, 0) + 1
+                if (by_id is not None and cost_model is not None
+                        and mem_budget is not None):
+                    try:
+                        gseqs = [by_id[i] for i in g.seq_ids]
+                    except KeyError as e:
+                        raise PlanValidationError(
+                            f"mb{mi}: unknown seq_id {e.args[0]}") from e
+                    mem = cost_model.memory(gseqs)
+                    if mem > mem_budget * g.degree + 1e-6:
+                        raise PlanValidationError(
+                            f"mb{mi}: memory {mem:.3g} > budget "
+                            f"{mem_budget:.3g} x degree {g.degree} "
+                            f"(Eq. 3)")
+            if n_ranks is not None and wave_degrees > n_ranks:
+                raise PlanValidationError(
+                    f"mb{mi}: sum of degrees {wave_degrees} > ranks "
+                    f"{n_ranks} (Eq. 6 wave feasibility)")
+        if by_id is not None:
+            dup = {i: c for i, c in seen.items() if c > 1}
+            missing = set(by_id) - set(seen)
+            extra = set(seen) - set(by_id)
+            if dup or missing or extra:
+                raise PlanValidationError(
+                    f"seq-id coverage broken: duplicated={sorted(dup)} "
+                    f"missing={sorted(missing)} extra={sorted(extra)}")
+        return self
+
+    # -- serialization ---------------------------------------------------
+    def to_json(self) -> dict:
+        """JSON-serializable dict, version-stamped and hash-stamped."""
+        return {
+            "version": PLAN_IR_VERSION,
+            "strategy_name": self.strategy_name,
+            "structural_hash": self.structural_hash(),
+            "total_time_est": self.total_time_est,
+            "schedule_ms": self.schedule_ms,
+            "solver_ms": self.solver_ms,
+            "stage_ms": dict(self.stage_ms),
+            "from_cache": self.from_cache,
+            "micro_batches": [mb.to_json() for mb in self.micro_batches],
+            "delta": self.delta.to_json() if self.delta else None,
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "ExecutionPlan":
+        v = int(obj.get("version", 1))
+        if v > PLAN_IR_VERSION:
+            raise ValueError(
+                f"plan IR version {v} is newer than supported "
+                f"{PLAN_IR_VERSION}")
+        plan = cls(
+            micro_batches=[MicroBatchPlan.from_json(mb)
+                           for mb in obj["micro_batches"]],
+            total_time_est=float(obj["total_time_est"]),
+            schedule_ms=float(obj.get("schedule_ms", 0.0)),
+            solver_ms=float(obj.get("solver_ms", 0.0)),
+            strategy_name=obj.get("strategy_name", ""),
+            stage_ms=dict(obj.get("stage_ms", {})),
+            version=PLAN_IR_VERSION,
+            from_cache=bool(obj.get("from_cache", False)),
+            delta=(GroupDelta.from_json(obj["delta"])
+                   if obj.get("delta") else None),
+        )
+        want = obj.get("structural_hash")
+        if want is not None and plan.structural_hash() != want:
+            raise ValueError(
+                f"plan structural hash mismatch: stored {want}, "
+                f"reconstructed {plan.structural_hash()} — corrupt or "
+                f"hand-edited plan file")
+        return plan
+
+
+def diff_plans(prev: Optional[ExecutionPlan], cur: ExecutionPlan,
+               n_ranks: int) -> GroupDelta:
+    """Group-reconfiguration delta between two consecutive plans.
+
+    Slots are the deduplicated (start, degree) rank slices each plan
+    occupies (via `group_slots`); `prev=None` means cold start — every
+    slot is `created`."""
+    cur_slots = sorted({(s, d) for _, _, s, d
+                        in cur.group_slots(n_ranks)})
+    if prev is None:
+        return GroupDelta(created=list(cur_slots))
+    prev_slots = {(s, d) for _, _, s, d in prev.group_slots(n_ranks)}
+    prev_starts = {s for s, _ in prev_slots}
+    delta = GroupDelta()
+    for slot in cur_slots:
+        if slot in prev_slots:
+            delta.reused.append(slot)
+        elif slot[0] in prev_starts:
+            delta.resized.append(slot)
+        else:
+            delta.created.append(slot)
+    cur_starts = {s for s, _ in cur_slots}
+    delta.released = sorted(slot for slot in prev_slots
+                            if slot[0] not in cur_starts)
+    return delta
+
+
+# -- persistence -------------------------------------------------------------
+def plans_to_json(plans: Seq[ExecutionPlan]) -> dict:
+    """A run's plan trace as one JSON document (the --save-plans file)."""
+    return {"version": PLAN_IR_VERSION,
+            "plans": [p.to_json() for p in plans]}
+
+
+def plans_from_json(obj: dict) -> List[ExecutionPlan]:
+    v = int(obj.get("version", 1))
+    if v > PLAN_IR_VERSION:
+        raise ValueError(f"plan file version {v} > {PLAN_IR_VERSION}")
+    return [ExecutionPlan.from_json(p) for p in obj["plans"]]
+
+
+def save_plans(path: str, plans: Seq[ExecutionPlan]) -> None:
+    with open(path, "w") as f:
+        json.dump(plans_to_json(plans), f, indent=1)
+
+
+def load_plans(path: str) -> List[ExecutionPlan]:
+    with open(path) as f:
+        return plans_from_json(json.load(f))
+
+
+# -- plan cache --------------------------------------------------------------
+def _default_cache_bucket(n: int) -> int:
+    b = 64
+    while b < n:
+        b *= 2
+    return b
+
+
+class PlanCache:
+    """LRU cache of ExecutionPlans keyed on the batch's bucketed length
+    histogram.
+
+    Recurring batch *shapes* — the common case under bucketed data
+    sampling — skip Stage 1 + the 2D-DP solver entirely: the cached
+    plan's structure is reused with seq_ids remapped onto the new batch
+    (both batches sorted by descending length, matched positionally) and
+    per-group time estimates re-evaluated for the actual lengths. A
+    remap whose memory invariant (Eq. 3) fails — same bucket, different
+    d_min — is treated as a miss, so hits are always feasible plans.
+    """
+
+    def __init__(self, capacity: int = 64,
+                 bucket_fn: Optional[Callable[[int], int]] = None):
+        self.capacity = capacity
+        self.bucket_fn = bucket_fn or _default_cache_bucket
+        self._entries: "OrderedDict[Any, Tuple[ExecutionPlan, List[SeqInfo]]]" \
+            = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def key(self, seqs: Seq[SeqInfo]) -> Any:
+        """Structural key: histogram over (length bucket, coarse eta)."""
+        h: Dict[Tuple[int, float], int] = {}
+        for s in seqs:
+            k = (self.bucket_fn(s.length), round(s.eta, 2))
+            h[k] = h.get(k, 0) + 1
+        return tuple(sorted(h.items()))
+
+    @staticmethod
+    def _order(seqs: Seq[SeqInfo]) -> List[SeqInfo]:
+        return sorted(seqs, key=lambda s: (-s.length, s.seq_id))
+
+    # ------------------------------------------------------------------
+    def lookup(self, seqs: Seq[SeqInfo], *,
+               cost_model: Optional[CostModel] = None,
+               n_ranks: Optional[int] = None,
+               mem_budget: Optional[float] = None
+               ) -> Optional[ExecutionPlan]:
+        """Return a plan for `seqs` remapped from a cached same-shape
+        batch, or None (miss)."""
+        k = self.key(seqs)
+        with self._lock:
+            entry = self._entries.get(k)
+            if entry is not None:
+                self._entries.move_to_end(k)
+        if entry is None:
+            self.misses += 1
+            return None
+        cached_plan, cached_seqs = entry
+        remap = {old.seq_id: new.seq_id
+                 for old, new in zip(self._order(cached_seqs),
+                                     self._order(seqs))}
+        by_id = {s.seq_id: s for s in seqs}
+        micro = []
+        for mb in cached_plan.micro_batches:
+            groups = []
+            for g in mb.groups:
+                ids = [remap[i] for i in g.seq_ids]
+                gseqs = [by_id[i] for i in ids]
+                est = (cost_model.group_time(gseqs, g.degree)
+                       if cost_model is not None else g.est_time)
+                groups.append(GroupPlan(
+                    seq_ids=ids, degree=g.degree, est_time=est,
+                    tokens=sum(s.length for s in gseqs)))
+            micro.append(MicroBatchPlan(
+                groups=groups,
+                makespan=max(g.est_time for g in groups),
+                ranks_used=mb.ranks_used))
+        plan = ExecutionPlan(
+            micro_batches=micro,
+            total_time_est=sum(m.makespan for m in micro),
+            schedule_ms=0.0, solver_ms=0.0,
+            strategy_name=cached_plan.strategy_name,
+            stage_ms={}, from_cache=True)
+        try:
+            plan.validate(seqs, n_ranks=n_ranks, cost_model=cost_model,
+                          mem_budget=mem_budget)
+        except PlanValidationError:
+            # same histogram bucket but a different d_min — do not serve
+            # an infeasible plan; replan (and let store() refresh it).
+            self.misses += 1
+            return None
+        self.hits += 1
+        return plan
+
+    def store(self, seqs: Seq[SeqInfo], plan: ExecutionPlan) -> None:
+        # Deep-copy through the IR so later telemetry mutations on the
+        # live plan (delta, schedule_ms) never leak into the cache.
+        snapshot = ExecutionPlan.from_json(plan.to_json())
+        snapshot.from_cache = False
+        with self._lock:
+            self._entries[self.key(seqs)] = (snapshot, list(seqs))
+            self._entries.move_to_end(self.key(seqs))
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._entries)}
 
 
 class MicroBatchPlanner:
@@ -270,6 +656,11 @@ def static_plan(
     chunks their sequential semantics — per-rank memory stays within
     budget. `total_time_est` is still max-over-lanes of the lane total
     (DP lanes run independently; they do not barrier per chunk).
+
+    Stage attribution mirrors the DHP pipeline's keys so benchmarks
+    read baseline plan cost through the same code path: degree sizing
+    is "allocate", dealing sequences into lanes is "pack", chunking
+    lanes into memory-feasible waves is "microbatch".
     """
     t0 = time.perf_counter()
     cm = cost_model
@@ -283,10 +674,12 @@ def static_plan(
     degree = min(degree, n_ranks)
     cap = (mem_budget - cm.coeffs.m_ms) * degree
     n_groups = max(1, n_ranks // degree)
+    t_alloc = time.perf_counter()
 
     shares: List[List[SeqInfo]] = [[] for _ in range(n_groups)]
     for i, s in enumerate(seqs):
         shares[i % n_groups].append(s)
+    t_pack = time.perf_counter()
 
     def group_total(share: List[SeqInfo]) -> tuple[float, List[GroupPlan]]:
         """Sequentially process micro-batches that fit d*E_act memory."""
@@ -324,7 +717,11 @@ def static_plan(
             groups=groups,
             makespan=max(g.est_time for g in groups),
             ranks_used=len(groups) * degree))
-    ms = (time.perf_counter() - t0) * 1e3
-    return ExecutionPlan(micro_batches=micro, total_time_est=total,
-                         schedule_ms=ms, solver_ms=0.0,
-                         strategy_name="static", stage_ms={"plan": ms})
+    t_micro = time.perf_counter()
+    ms = (t_micro - t0) * 1e3
+    return ExecutionPlan(
+        micro_batches=micro, total_time_est=total,
+        schedule_ms=ms, solver_ms=0.0, strategy_name="static",
+        stage_ms={"microbatch": (t_micro - t_pack) * 1e3,
+                  "pack": (t_pack - t_alloc) * 1e3,
+                  "allocate": (t_alloc - t0) * 1e3})

@@ -33,7 +33,14 @@ class RaggedBatch:
 
 
 class HeterogeneousLoader:
-    """Iterator of ragged global batches from a video-length distribution."""
+    """Iterator of ragged global batches from a video-length distribution.
+
+    Resumable: `state()` / `set_state()` snapshot and restore the exact
+    stream position (rng bit-generator state + batch index), so a
+    lookahead planner prefetching batch t+1 and a checkpoint-restored
+    run both see the SAME sequence of batches the original run did —
+    the precondition for `--replay-plans` being bit-identical.
+    """
 
     def __init__(self, dataset: str, gbs: int, vocab: int, *,
                  seed: int = 0, max_tokens: Optional[int] = None,
@@ -44,6 +51,7 @@ class HeterogeneousLoader:
         self.max_tokens = max_tokens
         self.tokens_per_frame = tokens_per_frame
         self.rng = np.random.default_rng(seed)
+        self.batch_index = 0
 
     def __iter__(self) -> Iterator[RaggedBatch]:
         return self
@@ -54,7 +62,20 @@ class HeterogeneousLoader:
                              tokens_per_frame=self.tokens_per_frame)
         toks = [self.rng.integers(0, self.vocab, size=s.length,
                                   dtype=np.int32) for s in infos]
+        self.batch_index += 1
         return RaggedBatch(infos=infos, tokens=toks)
+
+    # -- resumability ----------------------------------------------------
+    def state(self) -> Dict:
+        """JSON-serializable snapshot of the stream position."""
+        return {"batch_index": self.batch_index,
+                "rng_state": self.rng.bit_generator.state}
+
+    def set_state(self, state: Dict) -> None:
+        """Restore a `state()` snapshot; the next `__next__` yields the
+        same batch it would have in the original run."""
+        self.rng.bit_generator.state = state["rng_state"]
+        self.batch_index = int(state["batch_index"])
 
 
 def padded_batch(seqs: Seq[np.ndarray], bucket: int,

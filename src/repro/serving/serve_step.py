@@ -31,9 +31,15 @@ def cache_for_shape(cfg: ModelConfig, shape: InputShape,
 
 
 def greedy_generate(params, cfg: ModelConfig, cache, first_token,
-                    n_tokens: int):
-    """Host-loop generation used by examples/tests (not the dry-run)."""
-    step = jax.jit(make_serve_step(cfg))
+                    n_tokens: int, step=None):
+    """Host-loop generation used by examples/tests (not the dry-run).
+
+    `step`: a prebuilt jitted serve step — pass one fetched from a
+    GroupPool executable cache (as `Engine.serve` does) so repeated
+    serve calls on the same (batch, cache) shape reuse the compiled
+    artifact instead of re-jitting per call."""
+    if step is None:
+        step = jax.jit(make_serve_step(cfg))
     tok = first_token
     out = []
     for _ in range(n_tokens):

@@ -1,0 +1,286 @@
+"""Plan IR v2: serialization round-trips, structural hashing, invariant
+validation, group-reconfiguration deltas, the structural plan cache and
+plan replay — property-based over random ragged batches via
+tests/_hypothesis_compat.py."""
+import dataclasses
+import json
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.api import ReplayStrategy, get_strategy
+from repro.core import (CostModel, ExecutionPlan, GroupDelta, GroupPlan,
+                        MicroBatchPlan, PlanCache, PlanValidationError,
+                        SeqInfo, analytic_coeffs, diff_plans,
+                        evaluate_degrees, load_plans, save_plans,
+                        static_plan)
+
+CM = CostModel(dataclasses.replace(
+    analytic_coeffs(hidden=1024, n_layers=8, n_heads=8, kv_heads=4,
+                    ffn=4096, vocab=32000),
+    m_ms=0.0, m_token=1.0))
+N_RANKS = 8
+BUDGET = 2500.0
+
+# strategies whose plans the IR must round-trip (oracle excluded: it is
+# measurement-driven; replay is not a planner)
+PLANNERS = ("static", "megatron", "deepspeed", "dhp", "dhp-faithful",
+            "bruteforce")
+
+lengths_st = st.lists(st.integers(16, 2400), min_size=1, max_size=12)
+planner_st = st.sampled_from(PLANNERS)
+
+
+def _seqs(lengths, base=0):
+    return [SeqInfo(length=n, seq_id=base + i)
+            for i, n in enumerate(lengths)]
+
+
+def _plan(name, lengths, base=0):
+    return get_strategy(name, plan_cache=False).bind(
+        CM, N_RANKS, BUDGET).plan(_seqs(lengths, base))
+
+
+# ------------------------------------------------------------ round trip
+@settings(max_examples=25, deadline=None)
+@given(planner_st, lengths_st)
+def test_json_round_trip_preserves_structure(name, lengths):
+    seqs = _seqs(lengths)
+    plan = _plan(name, lengths)
+    obj = plan.to_json()
+    json.dumps(obj)                       # actually JSON-serializable
+    back = ExecutionPlan.from_json(obj)
+    assert back.structural_hash() == plan.structural_hash()
+    assert back.degree_histogram == plan.degree_histogram
+    assert back.strategy_name == plan.strategy_name
+    assert back.stage_ms == plan.stage_ms
+    back.validate(seqs, n_ranks=N_RANKS, cost_model=CM,
+                  mem_budget=BUDGET)
+    # rank-slot geometry (executor cursor, delta naming) survives too
+    assert (back.group_slots(N_RANKS) == plan.group_slots(N_RANKS))
+
+
+@settings(max_examples=15, deadline=None)
+@given(planner_st, lengths_st)
+def test_every_strategy_plan_validates(name, lengths):
+    plan = _plan(name, lengths)
+    plan.validate(_seqs(lengths), n_ranks=N_RANKS, cost_model=CM,
+                  mem_budget=BUDGET)
+
+
+@settings(max_examples=15, deadline=None)
+@given(lengths_st)
+def test_dhp_makespan_is_its_own_degree_evaluation(lengths):
+    """Every micro-batch's makespan equals the fixed-vector evaluation
+    of its own (seqs, degree) assignment under the same cost model."""
+    plan = _plan("dhp", lengths)
+    by_id = {s.seq_id: s for s in _seqs(lengths)}
+    for mb in plan.micro_batches:
+        ev = evaluate_degrees(
+            [[by_id[i] for i in g.seq_ids] for g in mb.groups],
+            [g.degree for g in mb.groups], CM.group_time)
+        assert ev.makespan == pytest.approx(mb.makespan, rel=1e-9)
+
+
+def test_hash_mismatch_detected_on_tampered_file():
+    plan = _plan("dhp", [128, 700, 1900])
+    obj = plan.to_json()
+    obj["micro_batches"][0]["groups"][0]["degree"] += 1
+    with pytest.raises(ValueError, match="structural hash mismatch"):
+        ExecutionPlan.from_json(obj)
+
+
+def test_from_json_rejects_future_version():
+    with pytest.raises(ValueError, match="newer than supported"):
+        ExecutionPlan.from_json({"version": 99, "micro_batches": [],
+                                 "total_time_est": 0.0})
+
+
+# ------------------------------------------------------------ validation
+def _manual_plan(groups, degree=1):
+    gps = [GroupPlan(list(ids), degree, 0.1, 1) for ids in groups]
+    return ExecutionPlan(
+        [MicroBatchPlan(gps, 0.1, degree * len(gps))], 0.1, 0.0, 0.0)
+
+
+def test_validate_catches_duplicate_and_missing_coverage():
+    seqs = _seqs([100, 200, 300])
+    with pytest.raises(PlanValidationError, match="coverage"):
+        _manual_plan([[0, 1], [1]]).validate(seqs)        # dup + missing
+    with pytest.raises(PlanValidationError, match="coverage"):
+        _manual_plan([[0, 1, 2, 3]]).validate(seqs)       # extra id
+
+
+def test_validate_catches_wave_oversubscription():
+    plan = _manual_plan([[0], [1]], degree=5)             # 10 > 8 ranks
+    with pytest.raises(PlanValidationError, match="Eq. 6"):
+        plan.validate(_seqs([10, 10]), n_ranks=N_RANKS)
+
+
+def test_validate_catches_memory_violation():
+    plan = _manual_plan([[0]], degree=1)
+    with pytest.raises(PlanValidationError, match="Eq. 3"):
+        plan.validate(_seqs([5000]), cost_model=CM, mem_budget=100.0)
+
+
+# ------------------------------------------------------------ deltas
+def test_delta_cold_start_and_self_diff():
+    plan = _plan("dhp", [128, 400, 900, 1500])
+    cold = diff_plans(None, plan, N_RANKS)
+    slots = {(s, d) for _, _, s, d in plan.group_slots(N_RANKS)}
+    assert set(cold.created) == slots and not cold.reused
+    again = diff_plans(plan, plan, N_RANKS)
+    assert set(again.reused) == slots
+    assert again.n_reconfigured == 0 and not again.released
+    rt = GroupDelta.from_json(json.loads(json.dumps(again.to_json())))
+    assert rt.reused == again.reused
+
+
+def test_delta_resize_detected():
+    prev = _manual_plan([[0]], degree=2)
+    cur = _manual_plan([[0]], degree=4)                  # start 0 resized
+    d = diff_plans(prev, cur, N_RANKS)
+    assert d.resized == [(0, 4)] and not d.created
+    assert d.n_reconfigured == 1
+
+
+# ------------------------------------------------------------ plan cache
+def test_plan_cache_hits_on_recurring_shape_and_remaps_ids():
+    strat = get_strategy("dhp").bind(CM, N_RANKS, BUDGET)
+    lengths = [128, 400, 900, 1500]
+    p1 = strat.plan(_seqs(lengths))
+    assert not p1.from_cache
+    p2 = strat.plan(_seqs(lengths, base=40))             # new ids, same shape
+    assert p2.from_cache and p2.solver_ms == 0.0
+    p2.validate(_seqs(lengths, base=40), n_ranks=N_RANKS,
+                cost_model=CM, mem_budget=BUDGET)
+    assert p2.degree_histogram == p1.degree_histogram
+    assert strat.plan_cache.stats["hits"] == 1
+    # different shape -> miss
+    p3 = strat.plan(_seqs([64, 64]))
+    assert not p3.from_cache
+
+
+def test_plan_cache_rejects_infeasible_remap():
+    """Same length bucket, different d_min: the cached plan must NOT be
+    served when the new lengths violate Eq. 3 at the cached degrees."""
+    cache = PlanCache()
+    a, b = _seqs([520]), _seqs([1000])
+    cache.store(a, _manual_plan([[0]], degree=1))         # fits 520@600
+    assert cache.lookup(a, cost_model=CM, n_ranks=N_RANKS,
+                        mem_budget=600.0) is not None
+    assert cache.lookup(b, cost_model=CM, n_ranks=N_RANKS,
+                        mem_budget=600.0) is None          # 1000 > 600*1
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(capacity=2)
+    for i, n in enumerate((100, 200, 300)):
+        cache.store(_seqs([n + i]), _manual_plan([[0]]))
+    assert len(cache) == 2
+
+
+def test_measuring_strategy_disables_cache_by_default():
+    assert get_strategy("oracle").plan_cache is None
+    assert get_strategy("dhp").plan_cache is not None
+    assert get_strategy("dhp", plan_cache=False).plan_cache is None
+
+
+# ------------------------------------------------------------ persistence
+def test_save_load_plans_file_round_trip(tmp_path):
+    plans = [_plan("dhp", [128, 700, 1900], base=i * 10)
+             for i in range(3)]
+    path = tmp_path / "plans.json"
+    save_plans(str(path), plans)
+    loaded = load_plans(str(path))
+    assert [p.structural_hash() for p in loaded] == \
+           [p.structural_hash() for p in plans]
+
+
+def test_replay_strategy_is_structurally_identical():
+    lengths = [128, 700, 1900, 300]
+    originals = [_plan("dhp", lengths, base=i * 10) for i in range(2)]
+    rs = ReplayStrategy(
+        plans=[p.to_json() for p in originals]).bind(CM, N_RANKS, BUDGET)
+    for i, orig in enumerate(originals):
+        replayed = rs.plan(_seqs(lengths, base=i * 10))
+        assert replayed.structural_hash() == orig.structural_hash()
+        assert (replayed.group_slots(N_RANKS)
+                == orig.group_slots(N_RANKS))
+    assert len(rs) == 0
+    with pytest.raises(RuntimeError, match="exhausted"):
+        rs.plan(_seqs(lengths))
+
+
+def test_replay_rejects_drifted_stream():
+    plan = _plan("dhp", [128, 700])
+    rs = ReplayStrategy(plans=[plan]).bind(CM, N_RANKS, BUDGET)
+    with pytest.raises(PlanValidationError):
+        rs.plan(_seqs([128, 700, 900]))                  # extra sequence
+
+
+# ------------------------------------------------------------ static plan
+def test_static_plan_stage_attribution_matches_dhp_keys():
+    seqs = _seqs([128, 400, 900, 1500])
+    sp = static_plan(seqs, CM, N_RANKS, BUDGET)
+    assert sp.strategy_name == "static"
+    assert {"microbatch", "pack", "allocate"} <= set(sp.stage_ms)
+    assert all(v >= 0.0 for v in sp.stage_ms.values())
+    assert sum(sp.stage_ms.values()) == pytest.approx(sp.schedule_ms,
+                                                      rel=0.2)
+
+
+# ------------------------------------------------------------ end to end
+def test_save_replay_bit_identical_on_devices(subproc, tmp_path):
+    """A trace saved via plan_log replays bit-identically: same
+    structural hashes, same rank slots, same executable-pool keys, same
+    loss — the --save-plans/--replay-plans acceptance criterion."""
+    subproc(f"""
+from repro.api import (ClusterSpec, Engine, ReplayStrategy, load_plans,
+                       save_plans)
+
+path = {str(tmp_path / "plans.json")!r}
+def engine(strategy):
+    return Engine("internvl3-2b", ClusterSpec.auto(mem_budget=900.0),
+                  strategy=strategy, reduced=True, seed=3)
+
+rec = engine("dhp")
+log1 = []
+h1 = rec.train(steps=2, dataset="openvid", global_batch=6,
+               max_tokens=256, plan_log=log1)
+save_plans(path, log1)
+keys1 = list(rec.executor.last_exe_keys)
+
+rep = engine(ReplayStrategy(plans=load_plans(path)))
+log2 = []
+h2 = rep.train(steps=2, dataset="openvid", global_batch=6,
+               max_tokens=256, plan_log=log2)
+assert [p.structural_hash() for p in log1] == \\
+       [p.structural_hash() for p in log2]
+assert [p.group_slots(8) for p in log1] == \\
+       [p.group_slots(8) for p in log2]
+assert keys1 == list(rep.executor.last_exe_keys)
+assert abs(h1[0].loss - h2[0].loss) < 1e-5
+assert all(m.strategy == "replay" for m in h2)
+print("replay ok", keys1)
+""", n_devices=8)
+
+
+# ------------------------------------------------------------ loader
+def test_loader_state_round_trip_through_json():
+    import numpy as np
+
+    from repro.data.pipeline import HeterogeneousLoader
+
+    ld = HeterogeneousLoader("openvid", 4, 1000, seed=3,
+                             max_tokens=512, tokens_per_frame=16)
+    next(ld), next(ld)
+    snap = json.loads(json.dumps(ld.state()))             # serializable
+    want = next(ld)
+    ld.set_state(snap)
+    assert ld.batch_index == snap["batch_index"]
+    got = next(ld)
+    assert [s.length for s in got.infos] == \
+           [s.length for s in want.infos]
+    assert all(np.array_equal(a, b)
+               for a, b in zip(got.tokens, want.tokens))
