@@ -71,17 +71,20 @@ def main() -> None:
     _calibration_row(report)
 
     if args.smoke:
-        from . import bench_end_to_end, bench_kernels
+        from . import bench_end_to_end, bench_kernels, bench_serving
         mods = [("end_to_end[smoke]",
                  lambda r: bench_end_to_end.run_smoke(r)),
+                ("serving[smoke]",
+                 lambda r: bench_serving.run_smoke(r)),
                 ("kernels[smoke]",
                  lambda r: bench_kernels.run_smoke(r))]
     else:
         from . import (bench_ablation, bench_case_study,
                        bench_end_to_end, bench_estimator, bench_kernels,
-                       bench_scaling, bench_solver)
+                       bench_scaling, bench_serving, bench_solver)
         mods = [("solver", bench_solver.run),
                 ("end_to_end", bench_end_to_end.run),
+                ("serving", bench_serving.run),
                 ("scaling", bench_scaling.run),
                 ("estimator", bench_estimator.run),
                 ("case_study", bench_case_study.run),

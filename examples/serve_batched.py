@@ -1,16 +1,28 @@
-"""Batched serving example through `Engine.serve`: prefill a batch of
-prompts, then decode with the ring-buffer KV cache (the decode_32k /
-long_500k code path, CPU-sized).
+"""Serving walkthrough: the one-shot path vs the continuous-batching
+runtime.
+
+Part 1 — `Engine.serve`: prefill one fixed batch of prompts, decode with
+the ring-buffer KV cache (the decode_32k / long_500k code path,
+CPU-sized). Every stream decodes until the longest is done.
+
+Part 2 — `Engine.serving()`: the DHP-aware runtime. A heterogeneous
+trace of requests (ragged prompt lengths, ragged output lengths,
+arrival times) flows through iteration-level continuous batching:
+prompts are chunk-prefilled under plans from the SAME DHP planner that
+schedules training batches, decode slots recycle as requests finish,
+and the paged KV manager gates admission.
 
   python examples/serve_batched.py [--arch glm4-9b] [--window 64]
 """
 import argparse
 import sys
 
+import numpy as np
+
 sys.path.insert(0, "src")
 
-from repro.api import Engine                           # noqa: E402
-from repro.configs import get_config                   # noqa: E402
+from repro.api import Engine, sample_trace                 # noqa: E402
+from repro.configs import get_config                       # noqa: E402
 
 
 def main():
@@ -21,6 +33,8 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window", type=int, default=None,
                     help="sliding-window cache (sub-quadratic variant)")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="trace length for the continuous-batching part")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -28,13 +42,13 @@ def main():
         cfg = cfg.with_(sliding_window=args.window)
     engine = Engine(cfg, strategy="static", seed=0)
 
+    # ---- part 1: the one-shot path ---------------------------------
     out, report = engine.serve(batch=args.batch,
                                prompt_len=args.prompt_len,
                                gen_tokens=args.gen)
-    print(f"prefill: batch={report['batch']} "
-          f"len={report['prompt_len']} ({report['prefill_s']:.2f}s)")
-    print(f"decoded {args.gen} tokens x {args.batch} streams "
-          f"({report['ms_per_token']:.1f} ms/token-step, "
+    print(f"one-shot: batch={report['batch']} "
+          f"len={report['prompt_len']} ({report['prefill_s']:.2f}s "
+          f"prefill, {report['ms_per_token']:.1f} ms/token-step, "
           f"compiled={report['exe_miss']})")
     print("stream 0:", [int(t) for t in out[0][:16]])
 
@@ -43,8 +57,34 @@ def main():
     out, report = engine.serve(batch=args.batch,
                                prompt_len=args.prompt_len,
                                gen_tokens=args.gen)
-    print(f"second serve call: exe_miss={report['exe_miss']} "
+    print(f"second one-shot call: exe_miss={report['exe_miss']} "
           f"({report['ms_per_token']:.1f} ms/token-step)")
+
+    # ---- part 2: continuous batching over a heterogeneous trace ----
+    rng = np.random.default_rng(0)
+    trace = sample_trace("openvid", args.requests, rng,
+                         vocab=engine.cfg.vocab, max_prompt=96,
+                         mean_new_tokens=12, max_new_tokens=32)
+    lens = sorted(r.prompt_len for r in trace)
+    print(f"\ntrace: {len(trace)} requests, prompt lens "
+          f"{lens[0]}..{lens[-1]}, "
+          f"{sum(r.max_new_tokens for r in trace)} total output tokens")
+
+    srv = engine.serving(slots=4, prefill_chunk=32)
+    rep = srv.run(trace)
+    print("continuous:", rep.summary())
+    print(f"  kv: peak={rep.peak_kv_blocks} blocks, "
+          f"occupancy max={max(rep.kv_occupancy):.2f}, "
+          f"cache_len={rep.cache_len}")
+    print(f"  planner: {rep.schedule_ms:.1f}ms host planning, "
+          f"plan_cache={rep.plan_cache}")
+
+    # a second trace of the same shape reuses every executable
+    rep2 = srv.run(sample_trace("openvid", args.requests, rng,
+                                vocab=engine.cfg.vocab, max_prompt=96,
+                                mean_new_tokens=12, max_new_tokens=32))
+    print(f"second trace: compiled={rep2.exe_misses} "
+          f"({rep2.tokens_per_s:.1f} tok/s)")
 
 
 if __name__ == "__main__":

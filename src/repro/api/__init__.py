@@ -17,6 +17,9 @@ with a `@register_strategy` decorator, not a new driver.
 from ..core.scheduler import (PLAN_IR_VERSION, ExecutionPlan, GroupDelta,
                               PlanCache, PlanValidationError, diff_plans,
                               load_plans, save_plans)
+from ..serving.runtime import ServeReport, ServingEngine
+from ..serving.scheduler import ServeRequest
+from ..serving.trace import sample_trace
 from .cluster import ClusterSpec
 from .engine import Engine, Session, StepMetrics, demo_cost_model
 from .strategies import (STRATEGY_REGISTRY, BruteForceStrategy,
@@ -34,4 +37,5 @@ __all__ = [
     "register_strategy",
     "PLAN_IR_VERSION", "ExecutionPlan", "GroupDelta", "PlanCache",
     "PlanValidationError", "diff_plans", "save_plans", "load_plans",
+    "ServingEngine", "ServeReport", "ServeRequest", "sample_trace",
 ]

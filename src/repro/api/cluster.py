@@ -70,6 +70,19 @@ class ClusterSpec:
                                    max_executables=self.max_executables)
         return self._pool
 
+    def decode_shape(self, n_active: int, context_len: int, *,
+                     min_slots: int = 2) -> tuple:
+        """Bucket a serving decode shape: (slot count, cache length).
+
+        Slot counts ride a pow2 ladder from `min_slots`, cache lengths
+        the pool's configured padding ladder — the serving analogue of
+        the training bucketing, so the slot-vmapped decode step (and the
+        slot-writer) compile once per rung instead of once per trace.
+        """
+        from ..core.group_pool import pow2_bucket
+        slots = pow2_bucket(max(int(n_active), 1), minimum=min_slots)
+        return slots, self.pool().bucket(int(context_len))
+
     def mesh(self):
         """Full-cluster (data, model) demo mesh for static pjit paths."""
         import jax

@@ -126,6 +126,10 @@ class Engine:
         self._apply_update = None
         self._step = 0
         self._prev_plan: Optional[ExecutionPlan] = None
+        #: the loader train() last built/used — checkpointed so resume
+        #: replays the exact remaining batch stream
+        self.loader = None
+        self._loader_state: Optional[dict] = None
 
     # -- lazy heavyweight pieces ----------------------------------------
     @property
@@ -248,6 +252,11 @@ class Engine:
             loader = HeterogeneousLoader(
                 dataset, global_batch, self.cfg.vocab, seed=self.seed,
                 max_tokens=max_tokens, tokens_per_frame=tokens_per_frame)
+        if self._loader_state is not None and hasattr(loader, "set_state"):
+            # a checkpoint restore left a stream position to resume from
+            loader.set_state(self._loader_state)
+            self._loader_state = None
+        self.loader = loader
         it: Iterator[RaggedBatch] = iter(loader)
 
         try:
@@ -355,15 +364,47 @@ class Engine:
         }
         return out, report
 
+    # -- serving ---------------------------------------------------------
+    def serving(self, *, slots: int = 4, prefill_chunk: int = 128,
+                cache_len: Optional[int] = None, block_size: int = 16,
+                n_blocks: Optional[int] = None, strategy: str = "dhp"):
+        """The continuous-batching runtime over this engine's model and
+        cluster (serving/runtime.py): paged KV slots, DHP-planned
+        chunked prefill, iteration-level batching. `serve()` below stays
+        the one-shot fixed-batch path."""
+        from ..serving.runtime import ServingEngine
+        return ServingEngine(
+            self.cfg, self.state.params, self.cluster, self.cost_model,
+            slots=slots, cache_len=cache_len, block_size=block_size,
+            n_blocks=n_blocks, prefill_chunk=prefill_chunk,
+            strategy=strategy, seed=self.seed)
+
     # -- checkpointing ---------------------------------------------------
     def save_checkpoint(self, path: str) -> None:
+        """Full train-state snapshot: params + optimizer moments + step
+        counter + (when train() ran with a resumable loader) the data
+        stream position — everything a bit-identical resume needs."""
         from ..training.checkpoint import save
-        save(path, self.state.params)
+        meta: Dict[str, Any] = {"format": 2, "step": self._step}
+        if self.loader is not None and hasattr(self.loader, "state"):
+            meta["loader"] = self.loader.state()
+        save(path, {"params": self.state.params, "opt": self.state.opt},
+             meta=meta)
 
     def load_checkpoint(self, path: str) -> None:
-        from ..training.checkpoint import restore
-        self.state = self.state._replace(
-            params=restore(path, self.state.params))
+        from ..training.checkpoint import load_meta, restore
+        meta = load_meta(path)
+        if meta is None:
+            # pre-format-2 checkpoint: params only, no meta blob
+            self.state = self.state._replace(
+                params=restore(path, self.state.params))
+            return
+        tree = restore(path, {"params": self.state.params,
+                              "opt": self.state.opt})
+        self.state = self.state._replace(params=tree["params"],
+                                         opt=tree["opt"])
+        self._step = int(meta.get("step", self._step))
+        self._loader_state = meta.get("loader")
 
     def close(self) -> None:
         self.strategy.close()

@@ -357,9 +357,15 @@ class PlanCache:
     """
 
     def __init__(self, capacity: int = 64,
-                 bucket_fn: Optional[Callable[[int], int]] = None):
+                 bucket_fn: Optional[Callable[[int], int]] = None,
+                 salt: Any = None):
+        """`salt` namespaces the key space so one cache can be shared
+        across planning phases (e.g. training batches vs serving
+        chunked-prefill batches) without a same-shape batch from one
+        phase serving a plan tuned for the other."""
         self.capacity = capacity
         self.bucket_fn = bucket_fn or _default_cache_bucket
+        self.salt = salt
         self._entries: "OrderedDict[Any, Tuple[ExecutionPlan, List[SeqInfo]]]" \
             = OrderedDict()
         self._lock = threading.Lock()
@@ -368,12 +374,13 @@ class PlanCache:
 
     # ------------------------------------------------------------------
     def key(self, seqs: Seq[SeqInfo]) -> Any:
-        """Structural key: histogram over (length bucket, coarse eta)."""
+        """Structural key: histogram over (length bucket, coarse eta),
+        namespaced by `salt`."""
         h: Dict[Tuple[int, float], int] = {}
         for s in seqs:
             k = (self.bucket_fn(s.length), round(s.eta, 2))
             h[k] = h.get(k, 0) + 1
-        return tuple(sorted(h.items()))
+        return (self.salt, tuple(sorted(h.items())))
 
     @staticmethod
     def _order(seqs: Seq[SeqInfo]) -> List[SeqInfo]:

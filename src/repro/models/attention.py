@@ -325,6 +325,30 @@ def attn_decode(q1, k_cache, v_cache, valid_len, *, mode: str = "causal",
     return o.reshape(B, 1, H, D).astype(q1.dtype)
 
 
+def attn_prefill_chunk(q, k_cache, v_cache, start_pos):
+    """Chunked-prefill attention: q [B,C,H,D] at absolute positions
+    start_pos..start_pos+C-1 vs a KV cache [B,T,Hkv,D] whose rows
+    [0, start_pos+C) are live (the chunk's own K/V must already be
+    written at its positions). Causal over absolute position: query i
+    attends cache rows j <= start_pos + i.
+
+    Rows past the live region are never attended (j > start_pos + i for
+    every query in the chunk), so garbage beyond the written prefix —
+    e.g. padding rows of a bucketed final chunk — cannot leak in.
+    """
+    B, C, H, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = (q.reshape(B, C, Hkv, G, D) / math.sqrt(D)).astype(jnp.float32)
+    s = jnp.einsum("bckgd,btkd->bckgt", qg, k_cache.astype(jnp.float32))
+    qpos = start_pos + jnp.arange(C)                           # [C]
+    live = jnp.arange(T)[None, :] <= qpos[:, None]             # [C,T]
+    s = jnp.where(live[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bckgt,btkd->bckgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, C, H, D).astype(q.dtype)
+
+
 # --------------------------------------------------------------------------
 # Full attention block (projections + rope + core dispatch)
 # --------------------------------------------------------------------------

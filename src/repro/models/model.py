@@ -273,6 +273,73 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int | None = None):
     return logits, cache
 
 
+def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any],
+                  tokens: jax.Array, start_pos) -> Dict[str, Any]:
+    """Extend a full-attention KV cache by one prompt chunk.
+
+    `tokens` [B, C] are prompt positions start_pos..start_pos+C-1;
+    their K/V are written into cache rows [start_pos, start_pos+C) and
+    each chunk token attends causally over everything written so far —
+    the incremental step chunked prefill repeats until the prompt's KV
+    is resident without ever materialising the O(L^2) one-shot prefill.
+
+    Requires a non-sliding cache (ring rotation would interleave chunk
+    writes); dense/moe/vlm only. `start_pos` may be traced, so one
+    compiled executable serves every chunk of every request at the same
+    (B, C, T) bucket. Returns the updated cache with pos advanced by C
+    (callers chunking a padded final bucket pass their own pos).
+    """
+    assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+    assert cfg.sliding_window is None, \
+        "chunked prefill needs a non-rotating cache"
+    from .attention import attn_prefill_chunk, project_qkv_decode  # noqa: F401
+    from .layers import apply_rope
+
+    x = _input_embeddings(params, cfg, {"tokens": tokens})
+    B, C, _ = x.shape
+    hd = cfg.resolved_head_dim
+    rope_frac = (0.0 if not cfg.use_rope
+                 else 0.5 if cfg.rope_2d else 1.0)
+    positions = start_pos + jnp.arange(C)[None, :]     # [1,C] -> bcast B
+
+    def block(p, h, ck, cv):
+        # ck/cv: [B,T,Hkv,D] — one layer's cache rows
+        g = rms_norm(p["ln1"], h, cfg.norm_eps)
+        q = (g @ p["attn"]["wq"]).reshape(B, C, cfg.n_heads, hd)
+        k = (g @ p["attn"]["wk"]).reshape(B, C, cfg.kv_heads, hd)
+        v = (g @ p["attn"]["wv"]).reshape(B, C, cfg.kv_heads, hd)
+        q = apply_rope(q, positions, cfg.rope_theta, rope_frac)
+        k = apply_rope(k, positions, cfg.rope_theta, rope_frac)
+        # drop-mode scatter, NOT dynamic_update_slice: a bucketed final
+        # chunk may extend past the cache capacity, and the slice op
+        # would clamp the start index and silently corrupt earlier rows
+        rows = start_pos + jnp.arange(C)
+        ck = ck.at[:, rows].set(k.astype(ck.dtype), mode="drop")
+        cv = cv.at[:, rows].set(v.astype(cv.dtype), mode="drop")
+        o = attn_prefill_chunk(q, ck, cv, start_pos)
+        h = h + o.reshape(B, C, -1) @ p["attn"]["wo"]
+        g = rms_norm(p["ln2"], h, cfg.norm_eps)
+        if cfg.family == "moe":
+            out, _ = moe_mod.moe_ffn(
+                p["moe"], g, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor,
+                dispatch=cfg.moe.dispatch,
+                dispatch_group=cfg.moe.dispatch_group)
+        else:
+            out = mlp(p["mlp"], g, cfg.activation)
+        return h + out, ck, cv
+
+    def body(h, xs):
+        p_l, ck, cv = xs
+        h, ck, cv = block(p_l, h, ck, cv)
+        return h, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"]))
+    return {**cache, "k": ks, "v": vs,
+            "pos": jnp.asarray(start_pos + C, jnp.int32)}
+
+
 # ==========================================================================
 # Decode caches
 # ==========================================================================

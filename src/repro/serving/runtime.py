@@ -1,0 +1,442 @@
+"""ServingEngine — the continuous-batching serving runtime.
+
+One event loop joins the three subsystems:
+
+  ContinuousBatchingScheduler  (admission + DHP-planned chunked prefill)
+  KVCacheManager               (decode slots + paged block accounting)
+  slot-vmapped decode step     (serve_step.make_slot_decode_step)
+
+Per iteration: admit arrivals, execute the planner's prefill groups
+(bounded chunks, so decode never stalls behind a long prompt), then run
+ONE decode step for every live slot. All executables live in the
+cluster's shared GroupPool keyed on bucketed shapes — steady-state
+serving compiles nothing, whatever the trace's request mix.
+
+Request streams are greedy and deterministic: a request decoded here
+yields exactly the token ids `greedy_generate` produces for the same
+prompt (the parity invariant tests/test_serving.py pins per family).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence as Seq
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .kv_cache import KVCacheManager
+from .scheduler import (DECODE, ContinuousBatchingScheduler, PrefillGroup,
+                        ServeRequest)
+
+ATTN_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    request_id: int
+    prompt_len: int
+    n_generated: int
+    tokens: List[int]                # the greedy-decoded output ids
+    ttft_s: Optional[float]          # first token - arrival
+    mean_tpot_s: float               # mean time per output token
+    queue_s: float                   # arrival -> admission
+    deadline_met: Optional[bool]     # None when no deadline was set
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate + per-request serving telemetry for one trace."""
+
+    requests: List[RequestMetrics]
+    wall_s: float
+    total_tokens: int
+    tokens_per_s: float
+    mean_ttft_s: float
+    max_ttft_s: float
+    n_iterations: int
+    n_decode_steps: int
+    n_prefill_chunks: int
+    schedule_ms: float               # host planning latency, summed
+    plan_cache: Dict[str, int]
+    exe_misses: int                  # executables compiled during the run
+    queue_depth: List[int]           # sampled per iteration
+    kv_occupancy: List[float]        # sampled per iteration
+    peak_kv_blocks: int
+    n_slots: int
+    cache_len: int
+
+    def summary(self) -> str:
+        return (f"{len(self.requests)} requests, "
+                f"{self.total_tokens} tokens in {self.wall_s:.2f}s "
+                f"({self.tokens_per_s:.1f} tok/s) "
+                f"ttft mean={self.mean_ttft_s * 1e3:.0f}ms "
+                f"max={self.max_ttft_s * 1e3:.0f}ms "
+                f"iters={self.n_iterations} "
+                f"(decode={self.n_decode_steps} "
+                f"prefill_chunks={self.n_prefill_chunks}) "
+                f"compiled={self.exe_misses}")
+
+
+class ServingEngine:
+    """Continuous-batching runtime over one model + cluster.
+
+    Build via `Engine.serving(...)`. The decode slot count and cache
+    capacity are bucketed through the cluster ladder
+    (`ClusterSpec.decode_shape`), so traces of different sizes reuse the
+    same compiled decode step.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, cluster, cost_model, *,
+                 slots: int = 4, cache_len: Optional[int] = None,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 prefill_chunk: int = 128, strategy: str = "dhp",
+                 seed: int = 0):
+        from ..api.strategies import get_strategy
+        self.cfg = cfg
+        self.params = params
+        self.cluster = cluster
+        self.pool = cluster.pool()
+        self.block_size = block_size
+        # MoE capacity-factor routing is global over the routed token
+        # set (padding or chunking a prompt changes expert assignment)
+        # and sliding-window caches rotate on prefill: both families
+        # prefill monolithically at exact length, first token taken
+        # from the prefill logits (see _run_prefill_group).
+        self.exact_prefill = (cfg.family == "moe"
+                              or cfg.sliding_window is not None)
+        self.prefill_chunk = (10 ** 9 if self.exact_prefill
+                              else prefill_chunk)
+        self.seed = seed
+        self._cache_len = cache_len
+        self._n_blocks = n_blocks
+        self.n_slots, _ = cluster.decode_shape(slots, 1)
+        self.attention_family = (cfg.family in ATTN_FAMILIES)
+        # own planner instance: serving plans must not evict training
+        # plans from an engine's strategy cache (PlanCache salt keeps
+        # the key spaces disjoint even when a cache IS shared).
+        self.planner = get_strategy(strategy).bind(
+            cost_model, cluster.n_replicas, cluster.mem_budget)
+        cache = self.planner.plan_cache
+        if cache is not None:
+            cache.salt = "serve-prefill"
+
+    # -- pooled executables ---------------------------------------------
+    def _exe(self, key, build):
+        exe, _ = self.pool.executable_for(key, build)
+        return exe
+
+    def _decode_step(self, n_slots: int, T: int):
+        import jax
+        from .serve_step import make_slot_decode_step
+        return self._exe(
+            ("pserve", self.cfg.arch_id, self.cfg.family, n_slots, T),
+            lambda: jax.jit(make_slot_decode_step(self.cfg)))
+
+    def _writer(self, n_slots: int, T: int):
+        import jax
+        from .serve_step import write_slot
+        return self._exe(
+            ("slot_write", self.cfg.arch_id, self.cfg.family,
+             n_slots, T),
+            lambda: jax.jit(write_slot))
+
+    def _group_prefill(self, rows: int, Sb: int, T: int):
+        import jax
+        from ..models.model import prefill
+        cfg = self.cfg
+
+        def fn(params, toks):
+            return prefill(params, cfg, {"tokens": toks}, cache_len=T)
+        return self._exe(
+            ("gprefill", cfg.arch_id, rows, Sb, T),
+            lambda: jax.jit(fn))
+
+    def _chunk_prefill(self, Cb: int, T: int):
+        import jax
+        from ..models.model import prefill_chunk
+        cfg = self.cfg
+
+        def fn(params, cache, toks, start):
+            return prefill_chunk(params, cfg, cache, toks, start)
+        return self._exe(
+            ("cprefill", cfg.arch_id, Cb, T),
+            lambda: jax.jit(fn))
+
+    # -- staging caches --------------------------------------------------
+    def _fresh_cache(self, request: ServeRequest, T: int):
+        """B=1 starting cache for one admitted request (audio gets its
+        cross-KV prefilled here, mirroring Engine.serve)."""
+        import jax
+        import jax.numpy as jnp
+        from ..models.model import init_cache, prefill_cross_kv
+        cache = init_cache(self.cfg, 1, T)
+        if self.cfg.family == "audio":
+            if request.frames is not None:
+                frames = jnp.asarray(request.frames)[None]
+            else:
+                frames = jax.random.normal(
+                    jax.random.PRNGKey(self.seed + 2),
+                    (1, self.cfg.encdec.n_audio_frames,
+                     self.cfg.d_model))
+            cache = prefill_cross_kv(self.params, self.cfg, frames,
+                                     cache)
+        return cache
+
+    # -- prefill execution -----------------------------------------------
+    def _run_prefill_group(self, group: PrefillGroup, sched, staging,
+                           pending_first, T: int) -> int:
+        """Execute one planner group; returns chunk count executed."""
+        import jax.numpy as jnp
+        one_shot, chunked = [], []
+        for c in group.chunks:
+            st = sched.states[c.request_id]
+            if (c.start == 0 and c.length == st.prefill_target
+                    and not self.exact_prefill):
+                one_shot.append(c)
+            else:
+                chunked.append(c)
+
+        if one_shot:
+            # co-batched full-prompt prefill, padded to one bucket. Rows
+            # are right-padded: causal attention makes KV[0:L-1] of a
+            # padded row identical to the exact-length computation, and
+            # decode re-derives position L-1 itself, so padding never
+            # leaks into a request's stream.
+            Sb = self.pool.bucket(max(c.length for c in one_shot))
+            from ..core.group_pool import pow2_bucket
+            rows = pow2_bucket(len(one_shot), minimum=1)
+            toks = np.zeros((rows, Sb), np.int32)
+            for r, c in enumerate(one_shot):
+                toks[r, :c.length] = \
+                    sched.states[c.request_id].request.tokens[:c.length]
+            _, cache = self._group_prefill(rows, Sb, T)(
+                self.params, jnp.asarray(toks))
+            for r, c in enumerate(one_shot):
+                row = {
+                    "k": cache["k"][:, r:r + 1],
+                    "v": cache["v"][:, r:r + 1],
+                    "pos": jnp.asarray(c.length, jnp.int32),
+                }
+                staging[c.request_id] = {**staging[c.request_id], **row}
+                sched.mark_prefilled(c.request_id, c.length)
+
+        for c in chunked:
+            st = sched.states[c.request_id]
+            if self.exact_prefill:
+                # ring caches rotate on prefill and MoE routing is
+                # padding/chunking-sensitive: run the WHOLE prompt
+                # exact-length (compiled per distinct length) against
+                # the capacity the slot cache actually holds, and take
+                # the first generated token straight from the prefill
+                # logits — the reference path, token for token.
+                assert c.start == 0 and c.length == st.prefill_target
+                Tring = (min(self.cfg.sliding_window, T)
+                         if self.cfg.sliding_window is not None else T)
+                L = st.request.prompt_len
+                toks = st.request.tokens[None, :]
+                logits, cache = self._group_prefill(1, L, Tring)(
+                    self.params, jnp.asarray(toks))
+                pending_first[c.request_id] = int(
+                    np.argmax(np.asarray(logits)[0, 0]))
+                staging[c.request_id] = {
+                    **staging[c.request_id], "k": cache["k"],
+                    "v": cache["v"],
+                    "pos": jnp.asarray(L, jnp.int32)}
+                sched.mark_prefilled(c.request_id, c.length)
+                continue
+            from ..core.group_pool import pow2_bucket
+            Cb = pow2_bucket(c.length, minimum=16)
+            toks = np.zeros((1, Cb), np.int32)
+            toks[0, :c.length] = \
+                st.request.tokens[c.start:c.start + c.length]
+            cache = self._chunk_prefill(Cb, T)(
+                self.params, staging[c.request_id], jnp.asarray(toks),
+                c.start)
+            # pos is owned by the bookkeeping here, not the padded chunk
+            cache = {**cache,
+                     "pos": jnp.asarray(c.start + c.length, jnp.int32)}
+            staging[c.request_id] = cache
+            sched.mark_prefilled(c.request_id, c.length)
+        return len(group.chunks)
+
+    # -- the loop ---------------------------------------------------------
+    def run(self, requests: Seq[ServeRequest], *,
+            log=None) -> ServeReport:
+        """Serve a trace to completion; returns the ServeReport."""
+        import jax.numpy as jnp
+        from .serve_step import make_slot_cache
+
+        requests = sorted(requests, key=lambda r: (r.arrival_s,
+                                                   r.request_id))
+        if not requests:
+            raise ValueError("empty trace")
+        max_ctx = max(r.context_len for r in requests)
+        _, T = self.cluster.decode_shape(self.n_slots, max_ctx)
+        if self._cache_len is not None:
+            T = max(T, self._cache_len)
+        n_blocks = self._n_blocks or max(
+            1, (self.n_slots * T) // self.block_size)
+        kv = KVCacheManager(self.n_slots, n_blocks, self.block_size)
+        sched = ContinuousBatchingScheduler(
+            kv, self.planner, prefill_chunk=self.prefill_chunk,
+            prefill_needed=self.attention_family)
+
+        exe_misses0 = self.pool.stats.exe_misses
+        slots = make_slot_cache(self.cfg, self.n_slots, T)
+        decode = self._decode_step(self.n_slots, T)
+        writer = self._writer(self.n_slots, T)
+        staging: Dict[int, Any] = {}
+        pending_first: Dict[int, int] = {}
+        next_token: Dict[int, int] = {}
+        slot_of: Dict[int, int] = {}
+        queue_depth: List[int] = []
+        kv_occ: List[float] = []
+        token_times: Dict[int, List[float]] = {}
+        n_iters = n_decode = n_chunks = 0
+        arrivals = list(requests)
+        t0 = time.perf_counter()
+        skip = 0.0                      # virtual fast-forward while idle
+
+        def now() -> float:
+            return time.perf_counter() - t0 + skip
+
+        max_iters = 10 * sum(r.max_new_tokens for r in requests) + \
+            10 * len(requests) + 100
+        while arrivals or sched.has_work():
+            n_iters += 1
+            if n_iters > max_iters:
+                raise RuntimeError(
+                    f"serving loop did not converge in {max_iters} "
+                    f"iterations")
+            t = now()
+            while arrivals and arrivals[0].arrival_s <= t:
+                r = arrivals.pop(0)
+                sched.submit(r, now=r.arrival_s)
+            if not sched.has_work():
+                skip += arrivals[0].arrival_s - t   # idle: fast-forward
+                continue
+
+            it = sched.step(t)
+            queue_depth.append(it.queue_depth)
+            kv_occ.append(it.kv_occupancy)
+
+            for rid in it.admitted:
+                st = sched.states[rid]
+                staging[rid] = self._fresh_cache(st.request, T)
+                next_token[rid] = int(st.request.tokens[-1])
+                token_times[rid] = []
+
+            for group in it.prefill_groups:
+                n_chunks += self._run_prefill_group(
+                    group, sched, staging, pending_first, T)
+
+            # prefill-complete requests move into their decode slot.
+            # The staged cache carries the right pos per path: L-1 for
+            # chunked/batched attention prefill (last prompt token is
+            # the first decode input), L for exact-prefill families
+            # (first token already taken from the prefill logits), 0
+            # for fresh state caches — Engine.serve's conventions.
+            for rid in list(sched.states):
+                st = sched.states[rid]
+                if not (st.status == DECODE and rid in staging):
+                    continue
+                slots = writer(slots, staging.pop(rid), st.slot)
+                slot_of[rid] = st.slot
+                if rid in pending_first:
+                    tok = pending_first.pop(rid)
+                    t_tok = now()
+                    st.generated.append(tok)
+                    next_token[rid] = tok
+                    token_times[rid].append(t_tok)
+                    st.first_token_s = t_tok
+                    req = st.request
+                    if (len(st.generated) >= req.max_new_tokens
+                            or (req.eos_id is not None
+                                and tok == req.eos_id)):
+                        sched.finish(rid, t_tok)
+                        del slot_of[rid]
+
+            # decode set derived AFTER the insert pass, not from the
+            # schedule: the vmapped step advances every slot, so a slot
+            # whose request was inserted this iteration must decode this
+            # iteration too — otherwise the step feeds it a pad token
+            # and shifts the request's stream by one garbage write.
+            decode_ids = sorted(
+                rid for rid, s in sched.states.items()
+                if s.status == DECODE and rid in slot_of)
+            if decode_ids:
+                toks = np.zeros((self.n_slots, 1), np.int32)
+                for rid in decode_ids:
+                    toks[slot_of[rid], 0] = next_token[rid]
+                out, slots = decode(self.params, slots,
+                                    jnp.asarray(toks))
+                out = np.asarray(out)
+                n_decode += 1
+                t_tok = now()
+                for rid in decode_ids:
+                    st = sched.states[rid]
+                    tok = int(out[slot_of[rid]])
+                    st.generated.append(tok)
+                    next_token[rid] = tok
+                    token_times[rid].append(t_tok)
+                    if st.first_token_s is None:
+                        st.first_token_s = t_tok
+                    req = st.request
+                    if (len(st.generated) >= req.max_new_tokens
+                            or (req.eos_id is not None
+                                and tok == req.eos_id)):
+                        sched.finish(rid, t_tok)
+                        del slot_of[rid]
+                        if log is not None:
+                            log(f"request {rid} finished: "
+                                f"{len(st.generated)} tokens, "
+                                f"ttft={st.ttft_s * 1e3:.0f}ms")
+
+        wall = time.perf_counter() - t0
+        return self._report(sched, token_times, wall, T,
+                            n_iters, n_decode, n_chunks,
+                            queue_depth, kv_occ, kv,
+                            self.pool.stats.exe_misses - exe_misses0)
+
+    # -- reporting --------------------------------------------------------
+    def _report(self, sched, token_times, wall, T, n_iters, n_decode,
+                n_chunks, queue_depth, kv_occ, kv,
+                exe_misses) -> ServeReport:
+        reqs = []
+        for st in sched.finished_states():
+            times = token_times.get(st.request.request_id, [])
+            gaps = np.diff(times) if len(times) > 1 else []
+            r = st.request
+            reqs.append(RequestMetrics(
+                request_id=r.request_id,
+                prompt_len=r.prompt_len,
+                n_generated=len(st.generated),
+                tokens=list(st.generated),
+                ttft_s=st.ttft_s,
+                mean_tpot_s=float(np.mean(gaps)) if len(gaps) else 0.0,
+                queue_s=st.admitted_s - st.enqueued_s,
+                deadline_met=(None if r.deadline_s is None
+                              else st.finished_s <= r.deadline_s)))
+        total = sum(m.n_generated for m in reqs)
+        ttfts = [m.ttft_s for m in reqs if m.ttft_s is not None]
+        cache = self.planner.plan_cache
+        return ServeReport(
+            requests=sorted(reqs, key=lambda m: m.request_id),
+            wall_s=wall,
+            total_tokens=total,
+            tokens_per_s=total / max(wall, 1e-9),
+            mean_ttft_s=float(np.mean(ttfts)) if ttfts else 0.0,
+            max_ttft_s=float(np.max(ttfts)) if ttfts else 0.0,
+            n_iterations=n_iters,
+            n_decode_steps=n_decode,
+            n_prefill_chunks=n_chunks,
+            schedule_ms=sched.schedule_ms_total,
+            plan_cache=dict(cache.stats) if cache is not None else {},
+            exe_misses=exe_misses,
+            queue_depth=queue_depth,
+            kv_occupancy=kv_occ,
+            peak_kv_blocks=kv.stats.peak_blocks,
+            n_slots=self.n_slots,
+            cache_len=T,
+        )

@@ -30,6 +30,50 @@ def cache_for_shape(cfg: ModelConfig, shape: InputShape,
     return {**cache, "pos": jnp.asarray(shape.seq_len, jnp.int32)}
 
 
+# --------------------------------------------------------------------------
+# Slot-vmapped decode (the continuous-batching runtime's step)
+# --------------------------------------------------------------------------
+def make_slot_cache(cfg: ModelConfig, n_slots: int, cache_len: int,
+                    dtype=None) -> Dict[str, Any]:
+    """Physical store of `n_slots` independent B=1 decode caches: every
+    leaf of `init_cache(cfg, 1, cache_len)` gains a leading slot axis.
+    Each slot keeps its OWN `pos` scalar — the property that lets
+    requests at different context depths share one decode step."""
+    one = init_cache(cfg, 1, cache_len, dtype)
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_slots,) + x.shape, x.dtype), one)
+
+
+def make_slot_decode_step(cfg: ModelConfig):
+    """One decode iteration over every slot at once.
+
+    `jax.vmap` of the single-request decode over the slot axis: per-slot
+    positions, ring writes and state updates all batch into one compiled
+    executable whose shape depends only on (n_slots, cache_len) — decode
+    batch composition (which request sits in which slot) can change
+    every iteration without re-jitting. Returns (next_tokens [n_slots],
+    slots) with greedy argmax applied, mirroring make_serve_step."""
+    def one(params, cache, tok):
+        logits, cache = decode_step(params, cfg, cache, tok)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    def step(params, slots, tokens):
+        # tokens: [n_slots, 1] (each slot is a B=1 cache)
+        toks, slots = jax.vmap(one, in_axes=(None, 0, 0))(
+            params, slots, tokens)
+        return toks[:, 0], slots
+    return step
+
+
+def write_slot(slots, cache, idx):
+    """Insert one B=1 request cache into slot `idx` (jit under the
+    caller; `idx` is traced so one executable serves every slot)."""
+    return jax.tree.map(
+        lambda buf, c: jax.lax.dynamic_update_index_in_dim(
+            buf, jnp.asarray(c, buf.dtype), idx, axis=0),
+        slots, cache)
+
+
 def greedy_generate(params, cfg: ModelConfig, cache, first_token,
                     n_tokens: int, step=None):
     """Host-loop generation used by examples/tests (not the dry-run).

@@ -1,0 +1,60 @@
+"""Synthetic serving traces from the paper's length distributions.
+
+The same truncated-lognormal video-duration model that drives training
+heterogeneity (core/distributions.py, paper Fig. 1) generates serving
+prompt lengths — a request's "prompt" stands in for a multimodal context
+whose token count follows the dataset's long tail. Output lengths and
+Poisson arrivals are drawn independently so a trace exercises both
+dimensions continuous batching exploits: ragged prefill cost and ragged
+decode lifetimes.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from ..core.distributions import sample_batch
+from .scheduler import ServeRequest
+
+
+def sample_trace(
+    dataset: str,
+    n: int,
+    rng: np.random.Generator,
+    *,
+    vocab: int = 1024,
+    max_prompt: int = 256,
+    min_prompt: int = 4,
+    mean_new_tokens: int = 16,
+    max_new_tokens: int = 64,
+    arrival_rate: Optional[float] = None,
+    tokens_per_frame: int = 16,
+    deadline_s: Optional[float] = None,
+) -> List[ServeRequest]:
+    """Draw `n` requests with heterogeneous prompt/output lengths.
+
+    Prompt lengths come from the dataset's duration distribution
+    (clipped to [min_prompt, max_prompt]); output lengths are geometric
+    with mean `mean_new_tokens` (clipped to max_new_tokens) — the
+    classic heavy-tailed decode-lifetime model; arrivals are Poisson
+    with `arrival_rate` requests/s (None = everything arrives at t=0,
+    the closed-batch case benchmarks use).
+    """
+    infos = sample_batch(dataset, n, rng, max_tokens=max_prompt,
+                         tokens_per_frame=tokens_per_frame)
+    arrival = 0.0
+    out: List[ServeRequest] = []
+    for i, info in enumerate(infos):
+        prompt_len = max(min_prompt, min(info.length, max_prompt))
+        tokens = rng.integers(0, vocab, size=prompt_len, dtype=np.int32)
+        new = int(np.clip(rng.geometric(1.0 / max(mean_new_tokens, 1)),
+                          1, max_new_tokens))
+        if arrival_rate:
+            arrival += float(rng.exponential(1.0 / arrival_rate))
+        out.append(ServeRequest(
+            request_id=i, tokens=tokens, max_new_tokens=new,
+            arrival_s=arrival,
+            deadline_s=(arrival + deadline_s) if deadline_s else None,
+            eta=info.eta))
+    return out

@@ -1,29 +1,57 @@
-"""Checkpointing: flat .npz save/restore of arbitrary pytrees."""
+"""Checkpointing: flat .npz save/restore of arbitrary pytrees.
+
+`save`/`restore` flatten any pytree (dicts, NamedTuples such as
+TrainState/AdamWState) into named npz entries. A JSON `meta` blob rides
+along under a reserved key for non-array state — the training step
+counter and the data-loader stream position that make a restored run
+continue bit-identically.
+"""
 from __future__ import annotations
 
+import json
 import os
-from typing import Any, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 SEP = "::"
+META_KEY = "__meta_json__"
+
+
+def _path_name(p) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (NamedTuple
+    # fields) -> .name
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
 
 
 def _flatten(tree) -> dict:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = SEP.join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
-        flat[key] = np.asarray(leaf)
+        flat[SEP.join(_path_name(p) for p in path)] = np.asarray(leaf)
     return flat
 
 
-def save(path: str, tree: Any) -> None:
+def save(path: str, tree: Any, meta: Optional[dict] = None) -> None:
+    flat = _flatten(tree)
+    if meta is not None:
+        flat[META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)
     tmp = path + ".tmp"
-    np.savez(tmp, **_flatten(tree))
+    np.savez(tmp, **flat)
     os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_meta(path: str) -> Optional[dict]:
+    """The JSON meta blob of a checkpoint, or None (old format)."""
+    data = np.load(path)
+    if META_KEY not in data.files:
+        return None
+    return json.loads(bytes(data[META_KEY].tobytes()).decode())
 
 
 def restore(path: str, like: Any) -> Any:
@@ -32,10 +60,11 @@ def restore(path: str, like: Any) -> Any:
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in flat_like:
-        key = SEP.join(
-            str(q.key) if hasattr(q, "key") else str(q.idx) for q in p)
+        key = SEP.join(_path_name(q) for q in p)
         arr = data[key]
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves)
+
+
