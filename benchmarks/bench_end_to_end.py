@@ -200,9 +200,73 @@ def run_lookahead(report):
            f" on the plan-stall component")
 
 
+def run_modality_mix(report):
+    """ISSUE-5 sweep: the SAME length histogram planned under different
+    modality mixes (pure text, interleaved frames, monolithic
+    vision-prefix blocks). The derived-eta cost model must price the
+    mixes apart — the planner-visible signal the scalar eta hack
+    collapsed — and the span-aware PlanCache must key them apart.
+    Planning cost is reported as */plan_us (NOT */schedule_ms: this
+    sweep plans far bigger batches than the fig4 smoke rows, and the
+    suffix rows feed the regression gate's median — mixing populations
+    would break the BENCH_*.json trajectory)."""
+    import numpy as np
+
+    from repro.api import get_strategy
+    from repro.core import (MMSequence, ModalitySpan, PlanCache,
+                            analytic_coeffs, sample_mm_batch)
+
+    cm = CostModel(analytic_coeffs(**MODELS["internvl3-2b"]))
+    rng = np.random.default_rng(11)
+    base = sample_mm_batch("openvid", 64, rng, max_tokens=65536)
+
+    def remix(mm, style):
+        spans, off, sid = [], 0, mm.seq_id
+        vis = sum(s.length for s in mm.spans
+                  if s.attn == "bidirectional")
+        L = mm.length
+        if style == "text" or vis == 0:
+            spans = [ModalitySpan("text", 0, L)]
+        elif style == "prefix":
+            spans = [ModalitySpan("vision", 0, vis, "bidirectional"),
+                     ModalitySpan("text", vis, L - vis)]
+        else:                      # interleaved: the sampled layout
+            return mm
+        return MMSequence(spans=tuple(spans), seq_id=sid)
+
+    rows = {}
+    for style in ("text", "interleaved", "prefix"):
+        batch = [remix(m, style) for m in base]
+        strat = get_strategy("dhp").bind(cm, 64, 8e9)
+        plan = strat.plan(batch)
+        eta = sum(m.eta * m.length for m in batch) / \
+            sum(m.length for m in batch)
+        rows[style] = plan.total_time_est
+        report(f"modality_mix/{style}", plan.total_time_est * 1e6,
+               f"token-weighted derived eta={eta:.3f} "
+               f"degrees={plan.degree_histogram}")
+        report(f"modality_mix/{style}/plan_us",
+               plan.schedule_ms * 1e3,
+               "value = us of host scheduling per span-bearing batch")
+    assert rows["text"] <= rows["interleaved"] <= rows["prefix"], rows
+    # span-aware PlanCache: identical length histograms, different
+    # layouts -> different keys (no false hits across mixes)
+    cache = PlanCache()
+    keys = {style: cache.key([remix(m, style).seq_info for m in base])
+            for style in ("text", "interleaved", "prefix")}
+    assert len(set(keys.values())) == 3, keys
+    report("modality_mix/eta_cost_spread",
+           rows["prefix"] / rows["text"],
+           "prefix-vision vs pure-text iteration-time factor at EQUAL "
+           "lengths (value = factor; >1 means structure is priced)")
+
+
 def run(report, smoke: bool = False):
     models = (dict(list(MODELS.items())[:1]) if smoke else MODELS)
-    iters = 1 if smoke else 3
+    # smoke averages over 3 sampled batches too: the */schedule_ms rows
+    # feed the CI regression gate, and single-sample planning latencies
+    # were noisy enough to flip the gate on identical code
+    iters = 3
     gbs = 64 if smoke else 512
     datasets = ("openvid",) if smoke else ("msrvtt", "internvid",
                                            "openvid")
@@ -231,6 +295,7 @@ def run(report, smoke: bool = False):
                        "value = us of host scheduling per batch")
     run_packed(report)
     run_lookahead(report)
+    run_modality_mix(report)
 
 
 def run_smoke(report):

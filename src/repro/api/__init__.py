@@ -14,6 +14,7 @@ Strategies are registry entries — `get_strategy("dhp")`,
 `get_strategy("oracle")` — so adding a parallelism policy is one class
 with a `@register_strategy` decorator, not a new driver.
 """
+from ..core.cost_model import MMSequence, ModalitySpan
 from ..core.scheduler import (PLAN_IR_VERSION, ExecutionPlan, GroupDelta,
                               PlanCache, PlanValidationError, diff_plans,
                               load_plans, save_plans)
@@ -35,6 +36,7 @@ __all__ = [
     "OracleStrategy", "MeasuredCostModel", "ReplayStrategy",
     "STRATEGY_REGISTRY", "available_strategies", "get_strategy",
     "register_strategy",
+    "MMSequence", "ModalitySpan",
     "PLAN_IR_VERSION", "ExecutionPlan", "GroupDelta", "PlanCache",
     "PlanValidationError", "diff_plans", "save_plans", "load_plans",
     "ServingEngine", "ServeReport", "ServeRequest", "sample_trace",

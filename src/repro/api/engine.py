@@ -59,6 +59,10 @@ class StepMetrics:
     #: planning latency hidden behind device execution by the lookahead
     #: pipeline (schedule_ms minus the time collect() actually blocked)
     plan_overlap_ms: float = 0.0
+    #: tokens per modality in the executed batch ({"text": .., "vision":
+    #: ..}); sequences without span structure count as "text"
+    modality_tokens: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     def summary(self) -> str:
         cached = " cached" if self.plan_cache_hit else ""
@@ -209,6 +213,15 @@ class Engine:
         step_time = time.perf_counter() - t0
         if timings:
             self.strategy.observe(plan, timings)
+        mod_tokens: Dict[str, int] = {}
+        for s in data.infos:
+            spans = getattr(s, "spans", None)
+            if spans:
+                for sp in spans:
+                    mod_tokens[sp.modality] = (
+                        mod_tokens.get(sp.modality, 0) + sp.length)
+            else:
+                mod_tokens["text"] = mod_tokens.get("text", 0) + s.length
         metrics = StepMetrics(
             step=self._step,
             loss=float(loss),
@@ -225,6 +238,7 @@ class Engine:
             exe_misses=self.executor.last_run_stats.get("exe_misses", 0),
             plan_cache_hit=plan.from_cache,
             groups_reconfigured=plan.delta.n_reconfigured,
+            modality_tokens=mod_tokens,
         )
         self._step += 1
         return metrics

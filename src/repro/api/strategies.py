@@ -24,7 +24,7 @@ from typing import (Callable, Dict, List, Optional, Sequence as Seq,
                     Tuple, Union)
 
 from ..core.allocator import allocate_bruteforce, evaluate_degrees
-from ..core.cost_model import CostModel, SeqInfo
+from ..core.cost_model import CostModel, SeqInfo, as_seq_infos
 from ..core.group_pool import pow2_bucket
 from ..core.scheduler import (DHPScheduler, ExecutionPlan, PlanCache,
                               static_plan)
@@ -76,6 +76,11 @@ class Strategy:
     #: engines pass per-group measured timings to observe() only when
     #: this is True (measuring serialises group dispatch).
     wants_measurement = False
+    #: planners derive the plan's span table from the input batch;
+    #: strategies that return externally RECORDED plans (replay) keep
+    #: the plan's own seq_spans — overwriting would change the
+    #: structural hash the trace was saved (and verified) with.
+    attaches_spans = True
 
     def __init__(self, cost_model: Optional[CostModel] = None,
                  n_ranks: Optional[int] = None,
@@ -140,8 +145,13 @@ class Strategy:
 
     # -- planning --------------------------------------------------------
     def plan(self, seqs: Seq[SeqInfo]) -> ExecutionPlan:
+        """Plan one batch. Accepts `SeqInfo`s, `MMSequence`s, or a mix —
+        multimodal sequences are planned through their SeqInfo view
+        (length and Eq. 8 eta derived from the span geometry) and the
+        span table is attached to the resulting plan (`seq_spans`), so
+        saved traces record the structure their costs came from."""
         self._require_bound()
-        seqs = list(seqs)
+        seqs = as_seq_infos(seqs)
         t0 = time.perf_counter()
         cache = self.plan_cache
         plan = None
@@ -157,6 +167,10 @@ class Strategy:
             plan = self._plan(seqs)
             if cache is not None:
                 cache.store(seqs, plan)
+        if self.attaches_spans:
+            spans = {s.seq_id: tuple(s.spans) for s in seqs
+                     if getattr(s, "spans", None)}
+            plan.seq_spans = spans or None
         plan.strategy_name = self.name
         return plan
 
@@ -397,6 +411,7 @@ class ReplayStrategy(Strategy):
     """
 
     name = "replay"
+    attaches_spans = False      # recorded plans keep their saved hash
 
     def __init__(self, cost_model=None, n_ranks=None, mem_budget=None, *,
                  plans: Optional[Seq[ExecutionPlan]] = None):

@@ -10,9 +10,12 @@ Public API:
 """
 from .allocator import (Allocation, allocate, allocate_bruteforce,
                         evaluate_degrees)
-from .cost_model import (CostCoeffs, CostModel, Hardware, SeqInfo,
-                         analytic_coeffs)
-from .distributions import DATASETS, sample_batch
+from .cost_model import (CostCoeffs, CostModel, Hardware, MMSequence,
+                         ModalitySpan, SeqInfo, analytic_coeffs,
+                         as_seq_infos, slice_spans, spans_eta,
+                         synthesize_spans)
+from .dataset_profiles import PROFILES, DatasetProfile, get_profile
+from .distributions import DATASETS, sample_batch, sample_mm_batch
 from .group_pool import (BUCKET_LADDERS, GroupPool, make_bucket_fn,
                          pow2_bucket)
 from .packing import (AtomicGroup, flatten_group, pack_sequences,
@@ -29,7 +32,10 @@ from .simulator import ClusterSimulator, end_to_end_table, scaling_table
 __all__ = [
     "Allocation", "allocate", "allocate_bruteforce", "evaluate_degrees",
     "CostCoeffs", "CostModel", "Hardware", "SeqInfo", "analytic_coeffs",
-    "DATASETS", "sample_batch",
+    "MMSequence", "ModalitySpan", "as_seq_infos", "slice_spans",
+    "spans_eta", "synthesize_spans",
+    "DatasetProfile", "PROFILES", "get_profile",
+    "DATASETS", "sample_batch", "sample_mm_batch",
     "AtomicGroup", "pack_sequences", "validate_packing",
     "flatten_group", "packing_efficiency",
     "BUCKET_LADDERS", "GroupPool", "make_bucket_fn", "pow2_bucket",

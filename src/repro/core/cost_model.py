@@ -16,20 +16,149 @@ that short sequences at low degree avoid redundant communication.
 eta_k is the *mask efficiency factor*: the extra attention compute from
 full-attention (vision) tokens relative to causal. eta=0 → pure causal,
 eta=1 → pure full attention (2x the causal FLOPs).
+
+Since PR 5, eta is no longer an asserted scalar: multimodal sequences
+are described structurally as `MMSequence`s of `ModalitySpan`s (a causal
+text stream with bidirectional vision/audio blocks embedded in it —
+the mask the paper's Eq. 8 actually costs), and eta is DERIVED from the
+span geometry. With the causal half-mask folded into a1 (causal over
+|s| tokens ~ |s|^2/2 score pairs), a bidirectional span of m tokens
+adds m^2/2 extra pairs on top of its causal share, so
+
+    eta = sum_b m_b^2 / |s|^2        over bidirectional spans b.
+
+One span covering the whole sequence gives eta=1 (pure full attention);
+no bidirectional spans give eta=0 (pure causal) — the two anchors of
+the scalar model. `SeqInfo` remains the planner currency: plain
+`SeqInfo(length, eta)` construction still works everywhere, and a
+span-bearing `SeqInfo` (the `MMSequence.seq_info` view) recomputes its
+`length`/`eta` from the spans so structure is the single source of
+truth.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence as Seq
+import math
+from typing import Callable, Optional, Sequence as Seq, Tuple
+
+#: valid ModalitySpan.attn values
+ATTN_CAUSAL = "causal"
+ATTN_BIDIRECTIONAL = "bidirectional"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModalitySpan:
+    """A contiguous run of same-modality tokens inside one sequence.
+
+    `start` is the token offset within the sequence; `attn` declares how
+    the span's tokens attend *within the span*: "causal" (text) or
+    "bidirectional" (vision frames / audio windows — the blocks that
+    make Eq. 8's eta non-zero). Across spans the stream stays causal.
+    """
+
+    modality: str                   # "text" | "vision" | "audio" | ...
+    start: int
+    length: int
+    attn: str = ATTN_CAUSAL
+
+    def __post_init__(self):
+        if self.length <= 0:
+            raise ValueError(f"span length must be positive: {self}")
+        if self.attn not in (ATTN_CAUSAL, ATTN_BIDIRECTIONAL):
+            raise ValueError(f"unknown span attn {self.attn!r}")
+
+    @property
+    def end(self) -> int:
+        return self.start + self.length
+
+    def to_json(self) -> list:
+        return [self.modality, self.start, self.length, self.attn]
+
+    @classmethod
+    def from_json(cls, obj) -> "ModalitySpan":
+        return cls(modality=str(obj[0]), start=int(obj[1]),
+                   length=int(obj[2]), attn=str(obj[3]))
+
+
+def spans_length(spans: Seq[ModalitySpan]) -> int:
+    return sum(s.length for s in spans)
+
+
+def spans_eta(spans: Seq[ModalitySpan]) -> float:
+    """Eq. 8's mask-efficiency factor derived from span geometry:
+    sum of squared bidirectional-span lengths over squared total."""
+    total = spans_length(spans)
+    if total <= 0:
+        return 0.0
+    extra = sum(s.length ** 2 for s in spans
+                if s.attn == ATTN_BIDIRECTIONAL)
+    return extra / float(total) ** 2
+
+
+def validate_spans(spans: Seq[ModalitySpan]) -> Tuple[ModalitySpan, ...]:
+    """Sort + check the spans tile [0, total) contiguously."""
+    out = tuple(sorted(spans, key=lambda s: s.start))
+    off = 0
+    for s in out:
+        if s.start != off:
+            raise ValueError(
+                f"spans must tile the sequence contiguously from 0: "
+                f"expected start {off}, got {s}")
+        off = s.end
+    return out
+
+
+def slice_spans(spans: Seq[ModalitySpan], start: int,
+                length: int) -> Tuple[ModalitySpan, ...]:
+    """Clip a span layout to the window [start, start+length), re-based
+    to 0 — how chunked prefill describes one chunk's structure."""
+    end = start + length
+    out = []
+    for sp in sorted(spans, key=lambda s: s.start):
+        a, b = max(sp.start, start), min(sp.end, end)
+        if b > a:
+            out.append(ModalitySpan(sp.modality, a - start, b - a,
+                                    sp.attn))
+    return tuple(out)
+
+
+def synthesize_spans(length: int, eta: float, *,
+                     modality: str = "vision") -> Tuple[ModalitySpan, ...]:
+    """Span layout whose DERIVED eta realises a target scalar eta: one
+    bidirectional prefix of v = round(sqrt(eta)*length) tokens plus a
+    causal text remainder, achieving eta' = v^2/length^2. Exact (bit
+    identical through `spans_eta`) whenever sqrt(eta)*length is
+    integral; otherwise the nearest representable layout."""
+    eta = min(max(float(eta), 0.0), 1.0)
+    v = min(int(round(math.sqrt(eta) * length)), length)
+    spans = []
+    if v > 0:
+        spans.append(ModalitySpan(modality, 0, v, ATTN_BIDIRECTIONAL))
+    if length - v > 0:
+        spans.append(ModalitySpan("text", v, length - v, ATTN_CAUSAL))
+    return tuple(spans)
 
 
 @dataclasses.dataclass(frozen=True)
 class SeqInfo:
-    """One training sequence (text + vision tokens, already concatenated)."""
+    """One training sequence (text + vision tokens, already concatenated).
+
+    `spans` (optional) is the structural description; when present,
+    `length` and `eta` are RE-DERIVED from it at construction, so a
+    span-bearing SeqInfo can never disagree with its own geometry.
+    Plain `SeqInfo(length, eta)` remains the scalar fallback."""
 
     length: int              # total token count |s_k|
     eta: float = 0.0         # mask efficiency factor (Eq. 8)
     seq_id: int = -1         # stable id for assignment matrices
+    spans: Optional[Tuple[ModalitySpan, ...]] = None
+
+    def __post_init__(self):
+        if self.spans:
+            spans = validate_spans(self.spans)
+            object.__setattr__(self, "spans", spans)
+            object.__setattr__(self, "length", spans_length(spans))
+            object.__setattr__(self, "eta", spans_eta(spans))
 
     @property
     def attn_weight(self) -> float:
@@ -39,6 +168,54 @@ class SeqInfo:
     @property
     def linear_weight(self) -> float:
         return float(self.length)
+
+
+@dataclasses.dataclass(frozen=True)
+class MMSequence:
+    """A multimodal sequence as its span structure — the first-class
+    planner input. Everything downstream (cost model, packer, PlanCache,
+    kernels) consumes the `SeqInfo` view (`.seq_info`), which carries
+    the spans along; `Strategy.plan` accepts MMSequences directly."""
+
+    spans: Tuple[ModalitySpan, ...]
+    seq_id: int = -1
+
+    def __post_init__(self):
+        object.__setattr__(self, "spans", validate_spans(self.spans))
+
+    @property
+    def length(self) -> int:
+        return spans_length(self.spans)
+
+    @property
+    def eta(self) -> float:
+        return spans_eta(self.spans)
+
+    @property
+    def seq_info(self) -> SeqInfo:
+        """Backward-compatible scalar view (length/eta derived)."""
+        return SeqInfo(length=0, eta=0.0, seq_id=self.seq_id,
+                       spans=self.spans)
+
+    # duck-type the SeqInfo surface so cost-model code accepts either
+    @property
+    def attn_weight(self) -> float:
+        return (1.0 + self.eta) * float(self.length) ** 2
+
+    @property
+    def linear_weight(self) -> float:
+        return float(self.length)
+
+    def modality_tokens(self) -> dict:
+        out: dict = {}
+        for s in self.spans:
+            out[s.modality] = out.get(s.modality, 0) + s.length
+        return out
+
+
+def as_seq_infos(seqs: Seq) -> list:
+    """Normalize a batch that may mix MMSequence and SeqInfo."""
+    return [s.seq_info if isinstance(s, MMSequence) else s for s in seqs]
 
 
 @dataclasses.dataclass(frozen=True)

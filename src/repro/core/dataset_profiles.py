@@ -1,0 +1,59 @@
+"""Dataset profiles — the ONE place the paper's evaluated datasets are
+described (Fig. 1 duration statistics + modality-layout conventions).
+
+Both the training-side length/span sampler (core/distributions.py) and
+the serving trace generator (serving/trace.py) draw from this table;
+previously each kept its own copy of the lognormal parameters.
+
+Layouts (how a clip's tokens are arranged into modality spans):
+  * "interleaved"  — per-frame bidirectional vision blocks interleaved
+                     with causal text (OpenVid / InternVid style
+                     frame-caption streams);
+  * "audio_prefix" — one bidirectional audio window up front, followed
+                     by the causal caption (MSRVTT-style transcription).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Union
+
+LAYOUT_INTERLEAVED = "interleaved"
+LAYOUT_AUDIO_PREFIX = "audio_prefix"
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetProfile:
+    """Duration distribution (truncated lognormal, Fig. 1) plus the
+    modality-layout convention of one evaluated dataset."""
+
+    name: str
+    mu: float        # lognormal mean of log-duration (seconds)
+    sigma: float     # lognormal sigma — the long-tail knob
+    min_s: float
+    max_s: float
+    layout: str = LAYOUT_INTERLEAVED
+    modality: str = "vision"        # the bidirectional modality
+    fps: float = 1.0
+    tokens_per_frame: int = 256
+    text_tokens: int = 128
+
+
+MSRVTT = DatasetProfile("msrvtt", mu=math.log(15.0), sigma=0.35,
+                        min_s=10, max_s=32,
+                        layout=LAYOUT_AUDIO_PREFIX, modality="audio")
+INTERNVID = DatasetProfile("internvid", mu=math.log(6.0), sigma=0.8,
+                           min_s=1, max_s=128)
+OPENVID = DatasetProfile("openvid", mu=math.log(5.0), sigma=1.25,
+                         min_s=1, max_s=512)
+
+PROFILES = {d.name: d for d in (MSRVTT, INTERNVID, OPENVID)}
+
+
+def get_profile(dataset: Union[str, DatasetProfile]) -> DatasetProfile:
+    if isinstance(dataset, DatasetProfile):
+        return dataset
+    if dataset not in PROFILES:
+        raise KeyError(
+            f"unknown dataset {dataset!r}; known: {sorted(PROFILES)}")
+    return PROFILES[dataset]

@@ -1,64 +1,116 @@
-"""Synthetic multimodal sequence-length distributions (paper Fig. 1).
+"""Synthetic multimodal sequence sampling (paper Fig. 1).
 
-The paper evaluates on MSRVTT, InternVid, and OpenVid; their duration
-histograms (Fig. 1) show: MSRVTT — clips 10-30 s, fairly uniform;
-InternVid — broad, most < 8 s with a tail; OpenVid — extreme long tail
-(most < 8 s, a few > 64 s). We model durations with truncated lognormals
-calibrated to those summaries and convert to token counts:
+Duration statistics live in core/dataset_profiles.py (shared with the
+serving trace generator); this module turns sampled durations into
+STRUCTURED multimodal sequences:
 
-  tokens = duration * fps * tokens_per_frame  (vision, full attention)
+  tokens = duration * fps * tokens_per_frame  (vision, bidirectional)
          + text_tokens                        (caption, causal)
 
-eta (Eq. 8's mask-efficiency factor) is the vision-token fraction: a clip
-whose tokens are mostly full-attention vision tokens approaches eta=1.
+`sample_mm_batch` is the first-class sampler: it lays the tokens out as
+`ModalitySpan`s per the dataset's layout convention — interleaved
+frame/text blocks for OpenVid/InternVid, an audio-prefix window for
+MSRVTT — and returns `MMSequence`s. Eq. 8's eta is DERIVED from that
+span geometry (`spans_eta`), replacing the old vision-token-fraction
+scalar hack. `sample_batch` is the backward-compatible view returning
+the `SeqInfo`s (spans attached), with the exact length distribution the
+scalar sampler produced.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List
+from typing import List, Optional, Union
 
 import numpy as np
 
-from .cost_model import SeqInfo
+from .cost_model import (ATTN_BIDIRECTIONAL, ATTN_CAUSAL, MMSequence,
+                         ModalitySpan, SeqInfo)
+from .dataset_profiles import (LAYOUT_AUDIO_PREFIX, LAYOUT_INTERLEAVED,
+                               INTERNVID, MSRVTT, OPENVID, PROFILES,
+                               DatasetProfile, get_profile)
+
+#: legacy aliases — the tables moved to core/dataset_profiles.py
+VideoDataset = DatasetProfile
+DATASETS = PROFILES
 
 
-@dataclasses.dataclass(frozen=True)
-class VideoDataset:
-    name: str
-    mu: float        # lognormal mean of log-duration (seconds)
-    sigma: float     # lognormal sigma — the long-tail knob
-    min_s: float
-    max_s: float
+def _layout_spans(profile: DatasetProfile, vis: int, text: int,
+                  tokens_per_frame: int) -> tuple:
+    """Arrange `vis` bidirectional + `text` causal tokens per the
+    dataset's layout convention. Always ends on a causal span when any
+    text exists (the trailing caption), so next-token prediction has a
+    causal tail."""
+    spans: List[ModalitySpan] = []
+    start = 0
+
+    def add(mod: str, ln: int, attn: str):
+        nonlocal start
+        if ln > 0:
+            spans.append(ModalitySpan(mod, start, ln, attn))
+            start += ln
+
+    if profile.layout == LAYOUT_AUDIO_PREFIX or vis == 0 or text == 0:
+        add(profile.modality, vis, ATTN_BIDIRECTIONAL)
+        add("text", text, ATTN_CAUSAL)
+        return tuple(spans)
+    assert profile.layout == LAYOUT_INTERLEAVED, profile.layout
+    frames: List[int] = []
+    left = vis
+    while left > 0:
+        m = min(tokens_per_frame, left)
+        frames.append(m)
+        left -= m
+    # text split across the k+1 slots around the frames; the remainder
+    # lands on the LAST slot so the stream ends with the caption
+    base, rem = divmod(text, len(frames) + 1)
+    for f in frames:
+        add("text", base, ATTN_CAUSAL)
+        add(profile.modality, f, ATTN_BIDIRECTIONAL)
+    add("text", base + rem, ATTN_CAUSAL)
+    return tuple(spans)
 
 
-MSRVTT = VideoDataset("msrvtt", mu=np.log(15.0), sigma=0.35, min_s=10, max_s=32)
-INTERNVID = VideoDataset("internvid", mu=np.log(6.0), sigma=0.8, min_s=1, max_s=128)
-OPENVID = VideoDataset("openvid", mu=np.log(5.0), sigma=1.25, min_s=1, max_s=512)
-
-DATASETS = {d.name: d for d in (MSRVTT, INTERNVID, OPENVID)}
-
-
-def sample_batch(
-    dataset: str | VideoDataset,
+def sample_mm_batch(
+    dataset: Union[str, DatasetProfile],
     n: int,
     rng: np.random.Generator,
     *,
-    fps: float = 1.0,
-    tokens_per_frame: int = 256,
-    text_tokens: int = 128,
-    max_tokens: int | None = None,
-) -> List[SeqInfo]:
-    """Draw a global batch of n multimodal sequences."""
-    ds = DATASETS[dataset] if isinstance(dataset, str) else dataset
+    fps: Optional[float] = None,
+    tokens_per_frame: Optional[int] = None,
+    text_tokens: Optional[int] = None,
+    max_tokens: Optional[int] = None,
+) -> List[MMSequence]:
+    """Draw a global batch of n structured multimodal sequences."""
+    ds = get_profile(dataset)
+    fps = ds.fps if fps is None else fps
+    tokens_per_frame = (ds.tokens_per_frame if tokens_per_frame is None
+                        else tokens_per_frame)
+    text_tokens = ds.text_tokens if text_tokens is None else text_tokens
     dur = rng.lognormal(ds.mu, ds.sigma, size=n)
     dur = np.clip(dur, ds.min_s, ds.max_s)
-    out: List[SeqInfo] = []
+    out: List[MMSequence] = []
     for i, t in enumerate(dur):
         vis = int(t * fps) * tokens_per_frame
         total = vis + text_tokens
         if max_tokens is not None:
             total = min(total, max_tokens)
             vis = min(vis, total - 1)
-        eta = vis / total  # fraction of full-attention tokens
-        out.append(SeqInfo(length=int(total), eta=float(eta), seq_id=i))
+        spans = _layout_spans(ds, vis, total - vis, tokens_per_frame)
+        out.append(MMSequence(spans=spans, seq_id=i))
     return out
+
+
+def sample_batch(
+    dataset: Union[str, DatasetProfile],
+    n: int,
+    rng: np.random.Generator,
+    *,
+    fps: Optional[float] = None,
+    tokens_per_frame: Optional[int] = None,
+    text_tokens: Optional[int] = None,
+    max_tokens: Optional[int] = None,
+) -> List[SeqInfo]:
+    """Backward-compatible view of `sample_mm_batch`: the same batch as
+    SeqInfos (spans attached, eta derived from the span geometry)."""
+    return [m.seq_info for m in sample_mm_batch(
+        dataset, n, rng, fps=fps, tokens_per_frame=tokens_per_frame,
+        text_tokens=text_tokens, max_tokens=max_tokens)]

@@ -112,13 +112,20 @@ class DHPExecutor:
         self.last_exe_keys: List[Tuple] = []
 
     # ------------------------------------------------------------------
-    def _build_grad_fn(self, mesh):
-        """(loss, grads) step over a sub-mesh; batch seq-axis sharded."""
+    def _build_grad_fn(self, mesh, with_spans: bool):
+        """(loss, grads) step over a sub-mesh; batch seq-axis sharded.
+
+        `with_spans` adds the modality_ids table (the mixed-mask
+        bidirectional-block table) to the sharded batch — only
+        span-bearing groups compile/run the span-masked attention
+        path; pure-causal groups keep the pre-span executable."""
         cfg = self.cfg_cp
 
         def build():
             pspec = P()     # params replicated on the sub-mesh (demo TP=1)
             keys = ("tokens", "labels", "mask", "positions")
+            if with_spans:
+                keys = keys + ("modality_ids",)
             if self.packed:
                 keys = keys + ("segment_ids",)
             bspec = {k: P(None, "cp") for k in keys}
@@ -146,37 +153,48 @@ class DHPExecutor:
         return build
 
     def _group_grad_fn(self, start: int, degree: int, n_seqs: int,
-                       bucket: int) -> Tuple[Any, bool, Tuple]:
+                       bucket: int, with_spans: bool
+                       ) -> Tuple[Any, bool, Tuple]:
         """Per-sequence-padded step for one CP group shape (legacy path:
         the executable key still depends on n_seqs)."""
         mesh = self.pool.mesh_for(start, degree)
-        key = ("grad", start, degree, n_seqs, bucket)
-        exe, miss = self.pool.executable_for(key,
-                                             self._build_grad_fn(mesh))
+        key = ("grad", start, degree, n_seqs, bucket) \
+            + (("mm",) if with_spans else ())
+        exe, miss = self.pool.executable_for(
+            key, self._build_grad_fn(mesh, with_spans))
         return exe, miss, key
 
-    def _packed_grad_fn(self, start: int, degree: int,
-                        bucket: int) -> Tuple[Any, bool, Tuple]:
+    def _packed_grad_fn(self, start: int, degree: int, bucket: int,
+                        with_spans: bool) -> Tuple[Any, bool, Tuple]:
         """Packed varlen step: ONE [1, bucket] buffer regardless of how
-        many sequences the group holds — n_seqs is gone from the key."""
+        many sequences the group holds — n_seqs is gone from the key.
+        Span-bearing groups get a distinct "mm" executable (their batch
+        carries the modality table); causal groups keep the exact
+        pre-span key tuple."""
         mesh = self.pool.mesh_for(start, degree)
-        key = ("pgrad", start, degree, bucket)
-        exe, miss = self.pool.executable_for(key,
-                                             self._build_grad_fn(mesh))
+        key = ("pgrad", start, degree, bucket) \
+            + (("mm",) if with_spans else ())
+        exe, miss = self.pool.executable_for(
+            key, self._build_grad_fn(mesh, with_spans))
         return exe, miss, key
 
     # ------------------------------------------------------------------
-    def _group_batch(self, seqs, degree: int):
-        """(np_batch, real_tokens, padded_tokens, bucket) for one group."""
+    def _group_batch(self, seqs, degree: int, spans=None):
+        """(np_batch, real_tokens, padded_tokens, bucket) for one group.
+
+        `spans` (optional, parallel to `seqs`) carries each sequence's
+        ModalitySpan layout; both paths emit the same per-sequence
+        modality table, so packed and per-sequence execution apply the
+        identical mixed mask."""
         if self.packed:
             total = sum(len(s) for s in seqs)
             bucket = self.pool.bucket(total)
             bucket += (-bucket) % degree       # shardable over cp
-            np_batch, cu = flatten_group(seqs, bucket)
+            np_batch, cu = flatten_group(seqs, bucket, spans=spans)
             return np_batch, int(cu[-1]), bucket, bucket
         bucket = self.pool.bucket(max(len(s) for s in seqs))
         bucket += (-bucket) % degree           # shardable over cp
-        np_batch = padded_batch(seqs, bucket)
+        np_batch = padded_batch(seqs, bucket, spans=spans)
         real = sum(min(len(s), bucket) for s in seqs)
         return np_batch, real, len(seqs) * bucket, bucket
 
@@ -211,19 +229,24 @@ class DHPExecutor:
         # slice a group runs on.
         slots = iter(plan.group_slots(self.pool.n_replicas))
         self.last_exe_keys = []
+        spans_by_id = (data.spans_by_id()
+                       if hasattr(data, "spans_by_id") else {})
         for mb in plan.micro_batches:
             handles = []
             for g in mb.groups:
                 _, _, start, _ = next(slots)
                 seqs = [data.by_id(i) for i in g.seq_ids]
+                spans = ([spans_by_id.get(i) for i in g.seq_ids]
+                         if spans_by_id else None)
                 np_batch, real, padded, bucket = self._group_batch(
-                    seqs, g.degree)
+                    seqs, g.degree, spans=spans)
+                with_spans = "modality_ids" in np_batch
                 if self.packed:
                     step, compiled, key = self._packed_grad_fn(
-                        start, g.degree, bucket)
+                        start, g.degree, bucket, with_spans)
                 else:
                     step, compiled, key = self._group_grad_fn(
-                        start, g.degree, len(seqs), bucket)
+                        start, g.degree, len(seqs), bucket, with_spans)
                 self.last_exe_keys.append(key)
                 batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
                 n_tok = float(np_batch["mask"].sum())

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Sequence as Seq, Tuple
+from typing import Dict, List, Optional, Sequence as Seq, Tuple
 
 import numpy as np
 
@@ -101,10 +101,29 @@ def pack_sequences(
     return bins
 
 
+def fill_modality_row(row: np.ndarray, spans, offset: int, length: int,
+                      next_id: int) -> int:
+    """Write one sequence's bidirectional-span ids into a modality table
+    row: tokens of the SAME bidirectional block share a nonnegative id
+    (unique within the row as numbered from `next_id`); causal text and
+    padding stay -1. Returns the next free id."""
+    if spans:
+        for sp in spans:
+            if sp.attn != "bidirectional":
+                continue
+            a = offset + sp.start
+            b = min(offset + sp.start + sp.length, offset + length)
+            if b > a:
+                row[a:b] = next_id
+                next_id += 1
+    return next_id
+
+
 def flatten_group(
     seqs: Seq[np.ndarray],
     bucket: int,
     pad_id: int = 0,
+    spans: Optional[Seq] = None,
 ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
     """Concatenate an atomic group's sequences into ONE packed buffer.
 
@@ -113,11 +132,22 @@ def flatten_group(
     all tokens live in a single [1, bucket] row padded only at the TAIL.
     The executable shape stops depending on n_seqs entirely.
 
+    `spans` (optional) is a per-sequence list of `ModalitySpan` tuples
+    (parallel to `seqs`; entries may be None) describing each
+    sequence's modality layout. The `modality_ids` table is emitted
+    ONLY when at least one entry is non-None — pure-causal batches
+    keep the exact pre-span batch dict, so they never pay for the
+    mixed-mask attention path.
+
     Returns `(batch, cu_seqlens)`:
-      batch = {tokens, labels, mask, positions, segment_ids}, all
-        [1, bucket]. positions reset at every segment boundary (RoPE
-        sees each sequence at its own offsets); segment_ids is the
-        block-diagonal attention table (-1 = tail padding); labels are
+      batch = {tokens, labels, mask, positions, segment_ids
+        [, modality_ids]}, all [1, bucket]. positions reset at every
+        segment boundary (RoPE sees each sequence at its own offsets);
+        segment_ids is the block-diagonal attention table (-1 = tail
+        padding); modality_ids marks bidirectional modality blocks —
+        tokens of one vision/audio span share a nonnegative id unique
+        within the buffer, causal text and padding are -1 (the mixed
+        mask lets i attend j>i only inside one block); labels are
         next-token WITHIN each segment — the last token of a segment is
         masked, never predicting across a boundary.
       cu_seqlens = int32 [n_seqs + 1] cumulative offsets (the standard
@@ -128,13 +158,18 @@ def flatten_group(
     total = int(sum(len(s) for s in seqs))
     if total > bucket:
         raise ValueError(f"packed tokens {total} exceed bucket {bucket}")
+    if spans is not None and not any(spans):
+        spans = None
     tokens = np.full((1, bucket), pad_id, np.int32)
     labels = np.full((1, bucket), pad_id, np.int32)
     mask = np.zeros((1, bucket), np.float32)
     positions = np.zeros((1, bucket), np.int32)
     segment_ids = np.full((1, bucket), -1, np.int32)
+    modality_ids = (np.full((1, bucket), -1, np.int32)
+                    if spans is not None else None)
     cu = np.zeros(len(seqs) + 1, np.int32)
     off = 0
+    next_mod = 0
     for i, s in enumerate(seqs):
         L = len(s)
         tokens[0, off:off + L] = s
@@ -143,10 +178,15 @@ def flatten_group(
             mask[0, off:off + L - 1] = 1.0
         positions[0, off:off + L] = np.arange(L, dtype=np.int32)
         segment_ids[0, off:off + L] = i
+        if modality_ids is not None:
+            next_mod = fill_modality_row(
+                modality_ids[0], spans[i], off, L, next_mod)
         off += L
         cu[i + 1] = off
     batch = {"tokens": tokens, "labels": labels, "mask": mask,
              "positions": positions, "segment_ids": segment_ids}
+    if modality_ids is not None:
+        batch["modality_ids"] = modality_ids
     return batch, cu
 
 

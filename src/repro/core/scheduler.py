@@ -24,13 +24,16 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence as Seq,
                     Tuple)
 
 from .allocator import Allocation, allocate
-from .cost_model import CostModel, SeqInfo
+from .cost_model import CostModel, ModalitySpan, SeqInfo
 from .packing import AtomicGroup, pack_sequences
 
 #: Plan IR version stamped into every serialized plan. v1 was the
 #: in-memory-only dataclass of PR 1; v2 adds to_json/from_json,
-#: structural hashing, GroupDelta and validation.
-PLAN_IR_VERSION = 2
+#: structural hashing, GroupDelta and validation; v3 adds the optional
+#: per-sequence modality-span table (`seq_spans`). v3 still READS v2
+#: files, and a span-free v3 plan hashes identically to its v2 form,
+#: so old traces keep verifying.
+PLAN_IR_VERSION = 3
 
 
 class PlanValidationError(ValueError):
@@ -140,6 +143,10 @@ class ExecutionPlan:
     delta: Optional[GroupDelta] = None
     # group reconfiguration vs the previously executed plan; filled by
     # diff_plans (the Engine does it automatically before execution).
+    seq_spans: Optional[Dict[int, Tuple[ModalitySpan, ...]]] = None
+    # per-sequence modality layout (seq_id -> spans) for span-bearing
+    # batches; Strategy.plan attaches it from the input sequences so a
+    # saved trace records the structure its costs were derived from.
 
     @property
     def n_groups(self) -> int:
@@ -172,16 +179,26 @@ class ExecutionPlan:
         return slots
 
     # -- structural identity --------------------------------------------
+    def _spans_tree(self) -> Optional[list]:
+        if not self.seq_spans:
+            return None
+        return sorted(
+            [int(sid), [sp.to_json() for sp in spans]]
+            for sid, spans in self.seq_spans.items())
+
     def structural_hash(self) -> str:
         """Stable digest of the plan STRUCTURE (micro-batch tree of
-        (seq_ids, degree)); timings, strategy attribution and telemetry
-        are excluded, so a replayed plan hashes identically to the plan
-        it was saved from."""
+        (seq_ids, degree), plus the modality-span table when present —
+        two plans over batches of equal lengths but different span
+        layouts have different costs, so they must hash apart)."""
         tree = [[[list(g.seq_ids), g.degree] for g in mb.groups]
                 for mb in self.micro_batches]
-        # structure only — no version salt, so a future IR bump keeps
-        # accepting (and hash-verifying) traces saved by older versions
-        blob = json.dumps(tree, separators=(",", ":"))
+        spans = self._spans_tree()
+        # structure only — no version salt, and span-free plans keep the
+        # exact v2 blob, so traces saved by older IR versions still
+        # hash-verify
+        blob = json.dumps(tree if spans is None else [tree, spans],
+                          separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
     # -- invariants ------------------------------------------------------
@@ -253,6 +270,9 @@ class ExecutionPlan:
             "from_cache": self.from_cache,
             "micro_batches": [mb.to_json() for mb in self.micro_batches],
             "delta": self.delta.to_json() if self.delta else None,
+            "seq_spans": (None if not self.seq_spans else {
+                str(sid): [sp.to_json() for sp in spans]
+                for sid, spans in self.seq_spans.items()}),
         }
 
     @classmethod
@@ -274,6 +294,10 @@ class ExecutionPlan:
             from_cache=bool(obj.get("from_cache", False)),
             delta=(GroupDelta.from_json(obj["delta"])
                    if obj.get("delta") else None),
+            seq_spans=(None if not obj.get("seq_spans") else {
+                int(sid): tuple(ModalitySpan.from_json(sp)
+                                for sp in spans)
+                for sid, spans in obj["seq_spans"].items()}),
         )
         want = obj.get("structural_hash")
         if want is not None and plan.structural_hash() != want:
@@ -373,14 +397,37 @@ class PlanCache:
         self.misses = 0
 
     # ------------------------------------------------------------------
+    def _span_sig(self, s: SeqInfo) -> Any:
+        """Coarse span-layout signature: (bidirectional span count,
+        bucketed bidirectional token total, bucketed largest block).
+        Two sequences of equal length whose span layouts differ (and
+        hence whose DERIVED eta/cost differ) land in different cache
+        buckets; scalar SeqInfos keep signature None, so pre-span
+        callers see the exact old key space. Deliberately O(1)-sized —
+        a long video is hundreds of frame spans, and this tuple is
+        hashed/sorted on every plan() call."""
+        spans = getattr(s, "spans", None)
+        if not spans:
+            return None
+        n = total = biggest = 0
+        for sp in spans:
+            if sp.attn == "bidirectional":
+                n += 1
+                total += sp.length
+                biggest = max(biggest, sp.length)
+        if n == 0:
+            return (0, 0, 0)
+        return (n, self.bucket_fn(total), self.bucket_fn(biggest))
+
     def key(self, seqs: Seq[SeqInfo]) -> Any:
-        """Structural key: histogram over (length bucket, coarse eta),
-        namespaced by `salt`."""
-        h: Dict[Tuple[int, float], int] = {}
+        """Structural key: histogram over (length bucket, coarse eta,
+        span signature), namespaced by `salt`."""
+        h: Dict[Any, int] = {}
         for s in seqs:
-            k = (self.bucket_fn(s.length), round(s.eta, 2))
+            k = (self.bucket_fn(s.length), round(s.eta, 2),
+                 self._span_sig(s))
             h[k] = h.get(k, 0) + 1
-        return (self.salt, tuple(sorted(h.items())))
+        return (self.salt, tuple(sorted(h.items(), key=repr)))
 
     @staticmethod
     def _order(seqs: Seq[SeqInfo]) -> List[SeqInfo]:

@@ -21,6 +21,7 @@ import numpy as np
 from ..configs.base import InputShape, ModelConfig
 from ..core.cost_model import SeqInfo
 from ..core.distributions import sample_batch
+from ..core.packing import fill_modality_row
 
 
 @dataclasses.dataclass
@@ -30,6 +31,11 @@ class RaggedBatch:
 
     def by_id(self, seq_id: int) -> np.ndarray:
         return self.tokens[seq_id]
+
+    def spans_by_id(self) -> Dict[int, tuple]:
+        """seq_id -> ModalitySpan tuple (only span-bearing sequences)."""
+        return {s.seq_id: s.spans for s in self.infos
+                if getattr(s, "spans", None)}
 
 
 class HeterogeneousLoader:
@@ -79,21 +85,38 @@ class HeterogeneousLoader:
 
 
 def padded_batch(seqs: Seq[np.ndarray], bucket: int,
-                 pad_id: int = 0) -> Dict[str, np.ndarray]:
-    """Pad ragged sequences to [n, bucket]: tokens/labels/mask/positions."""
+                 pad_id: int = 0,
+                 spans: Optional[Seq] = None) -> Dict[str, np.ndarray]:
+    """Pad ragged sequences to [n, bucket]: tokens/labels/mask/positions
+    + modality_ids when `spans` carries any layout (per-row
+    bidirectional-span table, -1 = causal/pad; `spans` is a
+    per-sequence list of ModalitySpan tuples, entries may be None).
+    Same mixed-mask semantics — and the same emit-only-when-present
+    rule — as the packed path, so packed and per-sequence execution
+    stay numerically identical and pure-causal batches skip the
+    span-masked attention path entirely."""
     n = len(seqs)
+    if spans is not None and not any(spans):
+        spans = None
     tokens = np.full((n, bucket), pad_id, np.int32)
     mask = np.zeros((n, bucket), np.float32)
+    modality_ids = (np.full((n, bucket), -1, np.int32)
+                    if spans is not None else None)
     for i, s in enumerate(seqs):
         L = min(len(s), bucket)
         tokens[i, :L] = s[:L]
         mask[i, :L] = 1.0
         mask[i, L - 1] = 0.0   # last valid token has no next-token label
+        if modality_ids is not None:
+            fill_modality_row(modality_ids[i], spans[i], 0, L, 0)
     labels = np.roll(tokens, -1, axis=1)
     labels[:, -1] = pad_id
     positions = np.tile(np.arange(bucket, dtype=np.int32), (n, 1))
-    return {"tokens": tokens, "labels": labels, "mask": mask,
-            "positions": positions}
+    batch = {"tokens": tokens, "labels": labels, "mask": mask,
+             "positions": positions}
+    if modality_ids is not None:
+        batch["modality_ids"] = modality_ids
+    return batch
 
 
 def synthetic_batch(cfg: ModelConfig, shape: InputShape,

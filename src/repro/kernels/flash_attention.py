@@ -22,6 +22,10 @@ term of Eq. 8). TPU-native design, not a CUDA port:
     what collapses the executor's executable key space (see
     core/executor.py) — group shape no longer depends on how many
     sequences were packed, only on the padded packed bucket.
+  * mixed modality mask: a span-id table rides next to the segment
+    table; same-id tokens (one bidirectional vision frame / audio
+    window) attend each other regardless of order inside their segment
+    — the mask DHP's Eq. 8 eta factor costs (span ids -1 = causal).
 
 Validated against ref.flash_attention_ref / ref.flash_attention_packed_ref
 in interpret mode (CPU).
@@ -109,19 +113,29 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                     jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
-def _packed_kernel(q_ref, k_ref, v_ref, segq_ref, segk_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, mode: str,
-                   window: Optional[int], sm_scale: float,
-                   block_q: int, block_k: int, kv_offset: int):
-    """Segment-aware (packed varlen) flash attention tile.
+def _packed_kernel(q_ref, k_ref, v_ref, segq_ref, segk_ref, *refs,
+                   mode: str, window: Optional[int], sm_scale: float,
+                   block_q: int, block_k: int, kv_offset: int,
+                   has_spans: bool):
+    """Segment-aware (packed varlen) flash attention tile with the
+    mixed modality mask.
 
     All sequences of a group live concatenated in ONE token buffer;
     attention is block-diagonal across segment boundaries. Inside a
     segment, packed indices are monotone in position, so the causal /
-    sliding structure is expressed directly in packed coordinates. A KV
-    tile with no attendable (q, k) pair is skipped via pl.when — the MXU
-    work truly drops, it is not a masked dense matmul.
+    sliding structure is expressed directly in packed coordinates; with
+    `has_spans` (a STATIC flag — span-free callers get the exact
+    pre-span kernel, no dummy tables or dead mask work) a span table
+    (-1 = causal text/padding) additionally lets same-id tokens — one
+    bidirectional vision frame / audio window — attend FORWARD within
+    their block, the mixed mask of DHP Eq. 8. A KV tile with no
+    attendable (q, k) pair is skipped via pl.when — the MXU work truly
+    drops, it is not a masked dense matmul.
     """
+    if has_spans:
+        spanq_ref, spank_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -143,9 +157,15 @@ def _packed_kernel(q_ref, k_ref, v_ref, segq_ref, segk_ref, o_ref,
     # same segment; padding (seg < 0) never attends or is attended
     valid = (seg_q[:, None] == seg_k[None, :]) & (seg_q >= 0)[:, None]
     if mode != "full":
-        valid &= kpos <= qpos
+        ok = kpos <= qpos
         if mode == "sliding":
-            valid &= kpos > qpos - window
+            ok &= kpos > qpos - window
+        if has_spans:
+            span_q = spanq_ref[0]                        # [bq] int32
+            span_k = spank_ref[0]                        # [bk] int32
+            ok |= (span_q >= 0)[:, None] \
+                & (span_q[:, None] == span_k[None, :])
+        valid &= ok
     # O(bq*bk) mask vs O(bq*bk*D) matmuls: deciding the skip costs 1/D
     # of the tile; fully-masked tiles (cross-segment, future-causal,
     # out-of-window, tail padding) skip both MXU passes.
@@ -189,6 +209,8 @@ def flash_attention_packed_flat(q, k, v, segment_ids, *,
                                 mode: str = "causal",
                                 window: Optional[int] = None,
                                 kv_segment_ids=None,
+                                span_ids=None,
+                                kv_span_ids=None,
                                 block_q: int = DEFAULT_BLOCK_Q,
                                 block_k: int = DEFAULT_BLOCK_K,
                                 kv_offset: int = 0,
@@ -198,13 +220,18 @@ def flash_attention_packed_flat(q, k, v, segment_ids, *,
     q: [BH, Sq, D]; k/v: [BH, Sk, D]; segment_ids: [Sq] or [BH, Sq]
     int32, -1 for tail padding. `kv_segment_ids` defaults to
     `segment_ids` (self-attention); pass the neighbour's table for a
-    ring hop together with its `kv_offset`.
+    ring hop together with its `kv_offset`. `span_ids`/`kv_span_ids`
+    (same shapes, -1 = causal) mark bidirectional modality blocks —
+    same-id tokens attend each other regardless of order, inside their
+    segment; None means pure segment-causal masking.
 
     Rows whose segment never matches (tail padding) emit exact zeros.
     """
     BH, Sq, D = q.shape
     Sk = k.shape[1]
     kv_seg = segment_ids if kv_segment_ids is None else kv_segment_ids
+    kv_span = span_ids if kv_span_ids is None else kv_span_ids
+    has_spans = kv_span is not None or span_ids is not None
     pad_q = (-Sq) % block_q
     pad_k = (-Sk) % block_k
     qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0))) if pad_q else q
@@ -212,6 +239,8 @@ def flash_attention_packed_flat(q, k, v, segment_ids, *,
     vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0))) if pad_k else v
 
     def _norm_seg(seg, length, pad, fill):
+        if seg is None:
+            return jnp.full((BH, length + pad), fill, jnp.int32)
         seg = jnp.asarray(seg, jnp.int32)
         if seg.ndim == 1:
             seg = jnp.broadcast_to(seg[None], (BH, length))
@@ -225,18 +254,28 @@ def flash_attention_packed_flat(q, k, v, segment_ids, *,
     kernel = functools.partial(
         _packed_kernel, mode=mode, window=window,
         sm_scale=1.0 / math.sqrt(D), block_q=block_q, block_k=block_k,
-        kv_offset=kv_offset)
+        kv_offset=kv_offset, has_spans=has_spans)
+
+    q_spec = pl.BlockSpec((1, block_q), lambda b, i, j: (b, i))
+    k_spec = pl.BlockSpec((1, block_k), lambda b, i, j: (b, j))
+    in_specs = [
+        pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        q_spec, k_spec,
+    ]
+    inputs = [qp, kp, vp, segq, segk]
+    if has_spans:
+        # span tables only enter the kernel when a layout exists —
+        # span-free callers keep the exact pre-span kernel program
+        in_specs += [q_spec, k_spec]
+        inputs += [_norm_seg(span_ids, Sq, pad_q, -1),
+                   _norm_seg(kv_span, Sk, pad_k, -2)]
 
     out = pl.pallas_call(
         kernel,
         grid=(BH, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
-            pl.BlockSpec((1, block_k), lambda b, i, j: (b, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq + pad_q, D), q.dtype),
         scratch_shapes=[
@@ -245,7 +284,7 @@ def flash_attention_packed_flat(q, k, v, segment_ids, *,
             pltpu.VMEM((block_q, D), jnp.float32),    # acc
         ],
         interpret=interpret,
-    )(qp, kp, vp, segq, segk)
+    )(*inputs)
     return out[:, :Sq]
 
 

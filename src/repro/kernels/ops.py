@@ -54,7 +54,8 @@ def flash_attention(q, k, v, *, mode: str = "causal",
          static_argnames=("mode", "window", "ref", "interpret", "block_q",
                           "block_k"))
 def flash_attention_packed(q, k, v, segment_ids, *, mode: str = "causal",
-                          window: Optional[int] = None, ref: bool = False,
+                          window: Optional[int] = None,
+                          span_ids=None, ref: bool = False,
                           interpret: bool = True, block_q: int = 128,
                           block_k: int = 128) -> jax.Array:
     """Packed varlen attention in model layout.
@@ -62,6 +63,8 @@ def flash_attention_packed(q, k, v, segment_ids, *, mode: str = "causal",
     q: [B,S,H,D]; k/v: [B,S,Hkv,D]; segment_ids: [B,S] or [S] int32
     (-1 = tail padding) -> [B,S,H,D]. Each batch row is an independent
     packed buffer; attention is block-diagonal over its segments.
+    `span_ids` (same shape convention, -1 = causal) marks bidirectional
+    modality blocks for the mixed mask.
     """
     B, Sq, H, D = q.shape
     k = _expand_gqa(k, H)
@@ -70,20 +73,41 @@ def flash_attention_packed(q, k, v, segment_ids, *, mode: str = "causal",
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
     kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
-    seg = jnp.asarray(segment_ids, jnp.int32)
-    if seg.ndim == 2:                       # [B,S] -> [B*H, S]
-        seg = jnp.repeat(seg, H, axis=0)
+
+    def _norm(t):
+        if t is None:
+            return None
+        t = jnp.asarray(t, jnp.int32)
+        if t.ndim == 2:                     # [B,S] -> [B*H, S]
+            t = jnp.repeat(t, H, axis=0)
+        return t
+
+    seg = _norm(segment_ids)
+    span = _norm(span_ids)
     if ref:
-        if seg.ndim == 1:
+        if seg.ndim == 1 and (span is None or span.ndim == 1):
             of = flash_attention_packed_ref(qf, kf, vf, seg, mode=mode,
-                                            window=window)
+                                            window=window, span_ids=span)
         else:
-            of = jax.vmap(lambda qq, kk, vv, ss: flash_attention_packed_ref(
-                qq[None], kk[None], vv[None], ss, mode=mode,
-                window=window)[0])(qf, kf, vf, seg)
+            seg2 = jnp.broadcast_to(seg, (B * H, Sk)) \
+                if seg.ndim == 1 else seg
+            if span is None:
+                of = jax.vmap(
+                    lambda qq, kk, vv, ss: flash_attention_packed_ref(
+                        qq[None], kk[None], vv[None], ss, mode=mode,
+                        window=window)[0])(qf, kf, vf, seg2)
+            else:
+                span2 = jnp.broadcast_to(span, (B * H, Sk)) \
+                    if span.ndim == 1 else span
+                of = jax.vmap(
+                    lambda qq, kk, vv, ss, pp: flash_attention_packed_ref(
+                        qq[None], kk[None], vv[None], ss, mode=mode,
+                        window=window, span_ids=pp)[0])(
+                    qf, kf, vf, seg2, span2)
     else:
         of = flash_attention_packed_flat(qf, kf, vf, seg, mode=mode,
-                                         window=window, block_q=block_q,
+                                         window=window, span_ids=span,
+                                         block_q=block_q,
                                          block_k=block_k,
                                          interpret=interpret)
     return of.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

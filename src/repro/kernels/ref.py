@@ -36,15 +36,20 @@ def flash_attention_ref(q, k, v, *, mode: str = "causal",
 
 def flash_attention_packed_ref(q, k, v, segment_ids, *,
                                mode: str = "causal",
-                               window: Optional[int] = None) -> jax.Array:
+                               window: Optional[int] = None,
+                               span_ids=None) -> jax.Array:
     """Block-diagonal (packed varlen) oracle. q/k/v: [BH, S, D] packed
     token buffers; segment_ids: [S] int32, -1 marks tail padding.
 
     Attention is masked to same-segment pairs; within a segment the
     causal/sliding structure uses packed indices directly (positions are
     monotone inside a segment, so `kpos <= qpos` in packed coordinates IS
-    per-segment causality). Rows with no attendable key (padding) emit
-    exact zeros — matching the Pallas kernel's skipped-tile semantics.
+    per-segment causality). `span_ids` ([S] int32, -1 = causal) adds the
+    mixed modality mask: same-id tokens (one vision frame / audio
+    window) attend bidirectionally within their block, overriding the
+    positional constraint but never the segment one. Rows with no
+    attendable key (padding) emit exact zeros — matching the Pallas
+    kernel's skipped-tile semantics.
     """
     BH, Sq, D = q.shape
     Sk = k.shape[1]
@@ -53,12 +58,18 @@ def flash_attention_packed_ref(q, k, v, segment_ids, *,
     seg = jnp.asarray(segment_ids, jnp.int32)
     qpos = jnp.arange(Sq)
     kpos = jnp.arange(Sk)
-    m = (seg[:Sq, None] == seg[None, :Sk]) & (seg[:Sq, None] >= 0)
-    if mode != "full":
-        m &= kpos[None, :] <= qpos[:, None]
+    same = (seg[:Sq, None] == seg[None, :Sk]) & (seg[:Sq, None] >= 0)
+    if mode == "full":
+        m = same
+    else:
+        ok = kpos[None, :] <= qpos[:, None]
         if mode == "sliding":
             assert window is not None
-            m &= kpos[None, :] > (qpos[:, None] - window)
+            ok &= kpos[None, :] > (qpos[:, None] - window)
+        if span_ids is not None:
+            sp = jnp.asarray(span_ids, jnp.int32)
+            ok |= (sp[:Sq, None] >= 0) & (sp[:Sq, None] == sp[None, :Sk])
+        m = same & ok
     s = jnp.where(m[None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     any_valid = m.any(axis=-1)                          # [Sq]

@@ -43,16 +43,30 @@ def init_attention(key, d_model: int, n_heads: int, kv_heads: int,
 # --------------------------------------------------------------------------
 # Cores. q: [B,S,H,D], k/v: [B,T,Hkv,D]. Positions are absolute.
 # --------------------------------------------------------------------------
+def _pos_mask(qpos, kpos, mode: str, window: Optional[int]):
+    """[S,T] positional (causal/full/sliding) boolean mask."""
+    if mode == "full":
+        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    m = kpos[None, :] <= qpos[:, None]
+    if mode == "sliding":
+        assert window is not None
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
 def _mask_bias(qpos, kpos, mode: str, window: Optional[int]):
     """[S,T] additive bias in fp32."""
-    if mode == "full":
-        m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
-    else:
-        m = kpos[None, :] <= qpos[:, None]
-        if mode == "sliding":
-            assert window is not None
-            m &= kpos[None, :] > (qpos[:, None] - window)
-    return jnp.where(m, 0.0, NEG_INF)
+    return jnp.where(_pos_mask(qpos, kpos, mode, window), 0.0, NEG_INF)
+
+
+def _span_mask(span_q, span_k):
+    """[B,S,T] bool: (q, k) lie in the SAME bidirectional modality
+    block. span ids >= 0 name a block (vision frame / audio window);
+    -1 marks causal text and padding. OR-ing this into the positional
+    mask lets block members attend FORWARD within their block — the
+    mixed mask of DHP Eq. 8."""
+    return (span_q[:, :, None] >= 0) \
+        & (span_q[:, :, None] == span_k[:, None, :])
 
 
 def _segment_bias(seg_q, seg_k):
@@ -64,8 +78,19 @@ def _segment_bias(seg_q, seg_k):
     return jnp.where(same, 0.0, NEG_INF)
 
 
+def _norm_table(t, B, S, dtype=jnp.int32):
+    """[S] or [B,S] id table -> [B,S] in `dtype`."""
+    t = jnp.asarray(t, dtype)
+    if t.ndim == 1:
+        t = jnp.broadcast_to(t[None], (B, S))
+    return t
+
+
 def attn_reference(q, k, v, *, mode: str, window=None, q_offset=0,
-                   kv_offset=0, segment_ids=None):
+                   kv_offset=0, segment_ids=None, span_ids=None):
+    """`span_ids` ([B,S] or [S] int32; -1 = causal) adds the mixed mask:
+    tokens sharing a nonnegative span id attend bidirectionally within
+    the block, embedded in the otherwise causal/sliding stream."""
     B, S, H, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
@@ -74,15 +99,21 @@ def attn_reference(q, k, v, *, mode: str, window=None, q_offset=0,
     s = jnp.einsum("bskgd,btkd->bskgt", qg, kf) / math.sqrt(D)
     qpos = q_offset + jnp.arange(S)
     kpos = kv_offset + jnp.arange(T)
-    s = s + _mask_bias(qpos, kpos, mode, window)[None, :, None, None, :]
+    allowed = jnp.broadcast_to(
+        _pos_mask(qpos, kpos, mode, window)[None], (B, S, T))
+    if span_ids is not None:
+        assert T == S, "span-masked attention is self-attention"
+        sp = _norm_table(span_ids, B, S)
+        allowed = allowed | _span_mask(sp, sp)
+    seg = None
     if segment_ids is not None:
-        seg = jnp.asarray(segment_ids, jnp.int32)
-        if seg.ndim == 1:
-            seg = jnp.broadcast_to(seg[None], (B, S))
-        s = s + _segment_bias(seg, seg)[:, :, None, None, :]
+        seg = _norm_table(segment_ids, B, S)
+        allowed = allowed & (seg[:, :, None] == seg[:, None, :]) \
+            & (seg >= 0)[:, :, None]
+    s = s + jnp.where(allowed, 0.0, NEG_INF)[:, :, None, None, :]
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
-    if segment_ids is not None:
+    if seg is not None:
         # tail-padding rows (seg < 0) have no attendable key: emit exact
         # zeros like every other packed implementation, instead of the
         # uniform softmax over an all-NEG_INF row
@@ -102,15 +133,9 @@ def _kv_blocks(k, v, chunk):
     return kb, vb, n_blk
 
 
-def _chunk_bias(qpos, i, chunk, T, mode, window, kv_offset):
-    kpos = kv_offset + i * chunk + jnp.arange(chunk)
-    bias = _mask_bias(qpos, kpos, mode, window)
-    return jnp.where(kpos[None, :] < kv_offset + T, bias, NEG_INF)
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
-def _attn_chunked_core(q, k, v, seg_q, seg_k, mode, window, q_offset,
-                       kv_offset, chunk):
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
+def _attn_chunked_core(q, k, v, seg_q, seg_k, span_q, span_k, mode,
+                       window, q_offset, kv_offset, chunk):
     """Flash attention in pure JAX: online-softmax scan over KV chunks,
     with a custom VJP that RECOMPUTES the probability tiles per chunk in
     the backward pass (flash-attention-2 backward). Live memory is
@@ -119,26 +144,32 @@ def _attn_chunked_core(q, k, v, seg_q, seg_k, mode, window, q_offset,
 
     `seg_q`/`seg_k` (None, or float32 [B,S]/[B,T] with -1 = padding)
     switch on packed-varlen masking: attention becomes block-diagonal
-    over segments. Float dtype so they ride through the custom VJP as
-    ordinary primals with zero cotangents."""
-    o, _ = _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode, window,
-                                  q_offset, kv_offset, chunk)
+    over segments. `span_q`/`span_k` (same convention) switch on the
+    mixed modality mask: same-id tokens attend bidirectionally within
+    their block. Float dtype so all tables ride through the custom VJP
+    as ordinary primals with zero cotangents."""
+    o, _ = _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, span_q, span_k,
+                                  mode, window, q_offset, kv_offset,
+                                  chunk)
     return o
 
 
 def attn_chunked(q, k, v, *, mode: str = "causal", window=None,
                  q_offset=0, kv_offset=0, chunk: int = 1024,
-                 segment_ids=None):
-    seg_q = seg_k = None
+                 segment_ids=None, span_ids=None):
+    seg_q = seg_k = span_q = span_k = None
     if segment_ids is not None:
-        seg = jnp.asarray(segment_ids, jnp.float32)
-        if seg.ndim == 1:
-            seg = jnp.broadcast_to(seg[None], (q.shape[0], q.shape[1]))
         assert k.shape[1] == q.shape[1], \
             "packed segments require self-attention (Sk == Sq)"
-        seg_q = seg_k = seg
-    return _attn_chunked_core(q, k, v, seg_q, seg_k, mode, window,
-                              q_offset, kv_offset, chunk)
+        seg_q = seg_k = _norm_table(segment_ids, q.shape[0], q.shape[1],
+                                    jnp.float32)
+    if span_ids is not None:
+        assert k.shape[1] == q.shape[1], \
+            "modality spans require self-attention (Sk == Sq)"
+        span_q = span_k = _norm_table(span_ids, q.shape[0], q.shape[1],
+                                      jnp.float32)
+    return _attn_chunked_core(q, k, v, seg_q, seg_k, span_q, span_k,
+                              mode, window, q_offset, kv_offset, chunk)
 
 
 def _seg_chunks(seg_k, chunk, n_blk):
@@ -150,23 +181,35 @@ def _seg_chunks(seg_k, chunk, n_blk):
 
 
 def _chunk_bias_seg(qpos, i, chunk, T, mode, window, kv_offset,
-                    seg_q, seg_kc):
-    """[B or 1, S, chunk] bias: positional mask + optional segment mask."""
-    bias = _chunk_bias(qpos, i, chunk, T, mode, window, kv_offset)[None]
+                    seg_q, seg_kc, span_q=None, span_kc=None):
+    """[B or 1, S, chunk] bias: positional mask, OR'd with the
+    bidirectional-block mask, AND'd with the segment mask."""
+    kpos = kv_offset + i * chunk + jnp.arange(chunk)
+    allowed = (_pos_mask(qpos, kpos, mode, window)
+               & (kpos[None, :] < kv_offset + T))[None]
+    if span_q is not None:
+        # span tables pad with -1, so padded KV slots never match
+        allowed = allowed | _span_mask(span_q, span_kc)
     if seg_q is not None:
-        bias = bias + _segment_bias(seg_q, seg_kc)
-    return bias
+        allowed = allowed & (seg_q[:, :, None] == seg_kc[:, None, :]) \
+            & (seg_q >= 0)[:, :, None]
+    return jnp.where(allowed, 0.0, NEG_INF)
 
 
-def _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode, window, q_offset,
-                           kv_offset, chunk):
+def _table_chunks(tab, chunk, n_blk):
+    return (_seg_chunks(tab, chunk, n_blk) if tab is not None
+            else jnp.zeros((n_blk, 1, 1)))
+
+
+def _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, span_q, span_k, mode,
+                           window, q_offset, kv_offset, chunk):
     B, S, H, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
     chunk = min(chunk, T)
     kb, vb, n_blk = _kv_blocks(k, v, chunk)
-    segb = (_seg_chunks(seg_k, chunk, n_blk) if seg_k is not None
-            else jnp.zeros((n_blk, 1, 1)))
+    segb = _table_chunks(seg_k, chunk, n_blk)
+    spanb = _table_chunks(span_k, chunk, n_blk)
     scale = 1.0 / math.sqrt(D)
     qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
     qpos = q_offset + jnp.arange(S)
@@ -177,12 +220,12 @@ def _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode, window, q_offset,
 
     def body(carry, blk):
         m, l, acc = carry
-        kc, vc, i, segc = blk
+        kc, vc, i, segc, spanc = blk
         s = jnp.einsum("bskgd,btkd->bskgt", qg,
                        kc.astype(jnp.float32)) * scale
-        s = s + _chunk_bias_seg(qpos, i, chunk, T, mode, window,
-                                kv_offset, seg_q,
-                                segc)[:, :, None, None, :]
+        s = s + _chunk_bias_seg(
+            qpos, i, chunk, T, mode, window, kv_offset, seg_q, segc,
+            span_q, spanc)[:, :, None, None, :]
         m_new = jnp.maximum(m, s.max(axis=-1))
         corr = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -192,29 +235,30 @@ def _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode, window, q_offset,
         return (m_new, l, acc), None
 
     (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blk), segb))
+        body, (m0, l0, a0), (kb, vb, jnp.arange(n_blk), segb, spanb))
     lse = m + jnp.log(jnp.maximum(l, 1e-30))           # [B,S,Hkv,G]
     o = acc / jnp.maximum(l[..., None], 1e-30)
     out = o.reshape(B, S, H, D).astype(q.dtype)
     return out, lse
 
 
-def _attn_chunked_fwd(q, k, v, seg_q, seg_k, mode, window, q_offset,
-                      kv_offset, chunk):
-    out, lse = _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, mode,
-                                      window, q_offset, kv_offset, chunk)
-    return out, (q, k, v, seg_q, seg_k, out, lse)
+def _attn_chunked_fwd(q, k, v, seg_q, seg_k, span_q, span_k, mode,
+                      window, q_offset, kv_offset, chunk):
+    out, lse = _attn_chunked_fwd_impl(q, k, v, seg_q, seg_k, span_q,
+                                      span_k, mode, window, q_offset,
+                                      kv_offset, chunk)
+    return out, (q, k, v, seg_q, seg_k, span_q, span_k, out, lse)
 
 
 def _attn_chunked_bwd(mode, window, q_offset, kv_offset, chunk, res, g):
-    q, k, v, seg_q, seg_k, out, lse = res
+    q, k, v, seg_q, seg_k, span_q, span_k, out, lse = res
     B, S, H, D = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
     chunk = min(chunk, T)
     kb, vb, n_blk = _kv_blocks(k, v, chunk)
-    segb = (_seg_chunks(seg_k, chunk, n_blk) if seg_k is not None
-            else jnp.zeros((n_blk, 1, 1)))
+    segb = _table_chunks(seg_k, chunk, n_blk)
+    spanb = _table_chunks(span_k, chunk, n_blk)
     scale = 1.0 / math.sqrt(D)
     qg = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
     gg = g.reshape(B, S, Hkv, G, D).astype(jnp.float32)
@@ -223,12 +267,12 @@ def _attn_chunked_bwd(mode, window, q_offset, kv_offset, chunk, res, g):
     qpos = q_offset + jnp.arange(S)
 
     def body(dq, blk):
-        kc, vc, i, segc = blk
+        kc, vc, i, segc, spanc = blk
         s = jnp.einsum("bskgd,btkd->bskgt", qg,
                        kc.astype(jnp.float32)) * scale
-        s = s + _chunk_bias_seg(qpos, i, chunk, T, mode, window,
-                                kv_offset, seg_q,
-                                segc)[:, :, None, None, :]
+        s = s + _chunk_bias_seg(
+            qpos, i, chunk, T, mode, window, kv_offset, seg_q, segc,
+            span_q, spanc)[:, :, None, None, :]
         p = jnp.exp(s - lse[..., None])                 # recomputed tile
         dv = jnp.einsum("bskgt,bskgd->btkd", p, gg)
         dp = jnp.einsum("bskgd,btkd->bskgt", gg, vc.astype(jnp.float32))
@@ -239,15 +283,15 @@ def _attn_chunked_bwd(mode, window, q_offset, kv_offset, chunk, res, g):
         return dq, (dk, dv)
 
     dq0 = jnp.zeros((B, S, Hkv, G, D), jnp.float32)
-    dq, (dkb, dvb) = jax.lax.scan(body, dq0,
-                                  (kb, vb, jnp.arange(n_blk), segb))
+    dq, (dkb, dvb) = jax.lax.scan(
+        body, dq0, (kb, vb, jnp.arange(n_blk), segb, spanb))
     dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, n_blk * chunk, Hkv, D)
     dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, n_blk * chunk, Hkv, D)
-    dseg_q = None if seg_q is None else jnp.zeros_like(seg_q)
-    dseg_k = None if seg_k is None else jnp.zeros_like(seg_k)
+    zero_like = lambda t: None if t is None else jnp.zeros_like(t)  # noqa: E731
     return (dq.reshape(B, S, H, D).astype(q.dtype),
             dk[:, :T].astype(k.dtype), dv[:, :T].astype(v.dtype),
-            dseg_q, dseg_k)
+            zero_like(seg_q), zero_like(seg_k),
+            zero_like(span_q), zero_like(span_k))
 
 
 _attn_chunked_core.defvjp(_attn_chunked_fwd, _attn_chunked_bwd)
@@ -325,7 +369,8 @@ def attn_decode(q1, k_cache, v_cache, valid_len, *, mode: str = "causal",
     return o.reshape(B, 1, H, D).astype(q1.dtype)
 
 
-def attn_prefill_chunk(q, k_cache, v_cache, start_pos):
+def attn_prefill_chunk(q, k_cache, v_cache, start_pos,
+                       chunk_span_ids=None, cache_span_ids=None):
     """Chunked-prefill attention: q [B,C,H,D] at absolute positions
     start_pos..start_pos+C-1 vs a KV cache [B,T,Hkv,D] whose rows
     [0, start_pos+C) are live (the chunk's own K/V must already be
@@ -335,6 +380,14 @@ def attn_prefill_chunk(q, k_cache, v_cache, start_pos):
     Rows past the live region are never attended (j > start_pos + i for
     every query in the chunk), so garbage beyond the written prefix —
     e.g. padding rows of a bucketed final chunk — cannot leak in.
+
+    `chunk_span_ids` [B,C] / `cache_span_ids` [B,T] (int32, -1 = causal)
+    switch on the mixed modality mask: a query inside a bidirectional
+    block (vision frame / audio window) additionally attends FORWARD to
+    same-block cache rows, restricted to the written region
+    [0, start_pos+C) — exact as long as the serving scheduler never
+    splits a bidirectional span across chunks (it snaps chunk
+    boundaries to span ends).
     """
     B, C, H, D = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -343,7 +396,13 @@ def attn_prefill_chunk(q, k_cache, v_cache, start_pos):
     s = jnp.einsum("bckgd,btkd->bckgt", qg, k_cache.astype(jnp.float32))
     qpos = start_pos + jnp.arange(C)                           # [C]
     live = jnp.arange(T)[None, :] <= qpos[:, None]             # [C,T]
-    s = jnp.where(live[None, :, None, None, :], s, NEG_INF)
+    allowed = jnp.broadcast_to(live[None], (B, C, T))
+    if chunk_span_ids is not None:
+        bidir = _span_mask(jnp.asarray(chunk_span_ids, jnp.int32),
+                           jnp.asarray(cache_span_ids, jnp.int32))
+        written = jnp.arange(T)[None, None, :] < start_pos + C
+        allowed = allowed | (bidir & written)
+    s = jnp.where(allowed[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bckgt,btkd->bckgd", p, v_cache.astype(jnp.float32))
     return o.reshape(B, C, H, D).astype(q.dtype)
@@ -360,11 +419,19 @@ def attention(params: dict, x: jax.Array, *, n_heads: int, kv_heads: int,
               cp_axis: Optional[str] = None,
               attn_chunk: int = 1024,
               segment_ids=None,
+              span_ids=None,
               return_kv: bool = False):
     """`segment_ids` ([B,S] int32, -1 = padding) selects the packed
     varlen path: x is a packed buffer of concatenated sequences and
     attention is block-diagonal over segments (causal/full/sliding
     *within* each). Pass per-segment-reset `positions` so RoPE matches.
+
+    `span_ids` ([B,S] int32, -1 = causal) switches on the mixed
+    modality mask: tokens sharing a nonnegative id form a bidirectional
+    block (vision frame / audio window) embedded in the causal stream —
+    composable with `segment_ids` (blocks never cross segments by
+    construction) and with any impl, including the ring-CP path where
+    the table rides the ppermute hops.
     """
     B, S, _ = x.shape
     q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
@@ -386,27 +453,30 @@ def attention(params: dict, x: jax.Array, *, n_heads: int, kv_heads: int,
         from ..parallel.ring_attention import ring_attention
         o = ring_attention(q, k, v, positions, axis_name=cp_axis,
                            mode=mode, window=window,
-                           q_seg=segment_ids)
+                           q_seg=segment_ids, q_span=span_ids)
         out = o.reshape(B, S, n_heads * head_dim) @ params["wo"]
         return (out, (k, v)) if return_kv else out
 
     if impl == "pallas":
-        if segment_ids is not None:
+        if segment_ids is not None or span_ids is not None:
             from ..kernels.ops import flash_attention_packed
-            o = flash_attention_packed(q, k, v, segment_ids, mode=mode,
-                                       window=window)
+            seg = (segment_ids if segment_ids is not None
+                   else jnp.zeros((B, S), jnp.int32))
+            o = flash_attention_packed(q, k, v, seg, span_ids=span_ids,
+                                       mode=mode, window=window)
         else:
             from ..kernels.ops import flash_attention
             o = flash_attention(q, k, v, mode=mode, window=window)
     elif impl == "reference":
         o = attn_reference(q, k, v, mode=mode, window=window,
-                           segment_ids=segment_ids)
+                           segment_ids=segment_ids, span_ids=span_ids)
     elif (mode == "sliding" and cross_kv is None and impl == "chunked"
-          and segment_ids is None):
+          and segment_ids is None and span_ids is None):
         o = attn_banded(q, k, v, window=window, chunk=min(attn_chunk, 512))
     else:
         o = attn_chunked(q, k, v, mode=mode, window=window,
-                         chunk=attn_chunk, segment_ids=segment_ids)
+                         chunk=attn_chunk, segment_ids=segment_ids,
+                         span_ids=span_ids)
     out = o.reshape(B, S, n_heads * head_dim) @ params["wo"]
     if return_kv:
         return out, (k, v)

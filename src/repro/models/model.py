@@ -135,23 +135,29 @@ def forward(params, cfg: ModelConfig, batch,
     # packed varlen: [B,S] segment table (-1 = tail padding); positions
     # reset per segment (core/packing.flatten_group produces both)
     segment_ids = batch.get("segment_ids")
+    # mixed modality mask: [B,S] bidirectional-block table (-1 = causal
+    # text / padding) — vision/audio spans attend forward within their
+    # block (flatten_group / padded_batch produce it)
+    span_ids = batch.get("modality_ids")
 
     if cfg.family in ("dense", "moe", "ssm", "vlm"):
         block = _BLOCK[cfg.family]
         def body(p_l, h):
             return block(p_l, h, cfg, mode=attn_mode, window=window,
-                         positions=positions, segment_ids=segment_ids)
+                         positions=positions, segment_ids=segment_ids,
+                         span_ids=span_ids)
         x, aux = apply_stack(params["layers"], x, body, cfg.remat,
                              cfg.scan_layers)
     elif cfg.family == "hybrid":
-        x, aux = _hybrid_forward(params, cfg, x, positions, segment_ids)
+        x, aux = _hybrid_forward(params, cfg, x, positions, segment_ids,
+                                 span_ids)
     else:
         raise ValueError(cfg.family)
     return _head(params, cfg, x), aux
 
 
 def _hybrid_block(p_unit, x, cfg: ModelConfig, positions=None,
-                  segment_ids=None):
+                  segment_ids=None, span_ids=None):
     from .transformer import _dense_block, _rec_block
     aux = jnp.zeros((), jnp.float32)
     for name in sorted(p_unit.keys()):
@@ -162,18 +168,21 @@ def _hybrid_block(p_unit, x, cfg: ModelConfig, positions=None,
             x, a = _dense_block(p_unit[name], x, cfg, mode="sliding",
                                 window=cfg.hybrid.window,
                                 positions=positions,
-                                segment_ids=segment_ids)
+                                segment_ids=segment_ids,
+                                span_ids=span_ids)
         aux = aux + a
     return x, aux
 
 
 def _hybrid_forward(params, cfg: ModelConfig, x, positions=None,
-                    segment_ids=None):
+                    segment_ids=None, span_ids=None):
     def body(p_unit, h):
-        return _hybrid_block(p_unit, h, cfg, positions, segment_ids)
+        return _hybrid_block(p_unit, h, cfg, positions, segment_ids,
+                             span_ids)
     x, aux = apply_stack(params["units"], x, body, cfg.remat,
                          cfg.scan_layers)
-    x, a2 = _hybrid_block(params["tail"], x, cfg, positions, segment_ids)
+    x, a2 = _hybrid_block(params["tail"], x, cfg, positions, segment_ids,
+                          span_ids)
     return x, aux + a2
 
 
@@ -274,7 +283,8 @@ def prefill(params, cfg: ModelConfig, batch, cache_len: int | None = None):
 
 
 def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any],
-                  tokens: jax.Array, start_pos) -> Dict[str, Any]:
+                  tokens: jax.Array, start_pos, span_ids=None,
+                  cache_span_ids=None) -> Dict[str, Any]:
     """Extend a full-attention KV cache by one prompt chunk.
 
     `tokens` [B, C] are prompt positions start_pos..start_pos+C-1;
@@ -282,6 +292,12 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any],
     each chunk token attends causally over everything written so far —
     the incremental step chunked prefill repeats until the prompt's KV
     is resident without ever materialising the O(L^2) one-shot prefill.
+
+    `span_ids` [B,C] / `cache_span_ids` [B,T] (int32, -1 = causal)
+    switch on the mixed modality mask: prompt tokens inside one
+    bidirectional block (vision frame / audio window) attend each other
+    regardless of order — exact when the serving scheduler keeps each
+    block within one chunk (it snaps chunk boundaries to span ends).
 
     Requires a non-sliding cache (ring rotation would interleave chunk
     writes); dense/moe/vlm only. `start_pos` may be traced, so one
@@ -316,7 +332,9 @@ def prefill_chunk(params, cfg: ModelConfig, cache: Dict[str, Any],
         rows = start_pos + jnp.arange(C)
         ck = ck.at[:, rows].set(k.astype(ck.dtype), mode="drop")
         cv = cv.at[:, rows].set(v.astype(cv.dtype), mode="drop")
-        o = attn_prefill_chunk(q, ck, cv, start_pos)
+        o = attn_prefill_chunk(q, ck, cv, start_pos,
+                               chunk_span_ids=span_ids,
+                               cache_span_ids=cache_span_ids)
         h = h + o.reshape(B, C, -1) @ p["attn"]["wo"]
         g = rms_norm(p["ln2"], h, cfg.norm_eps)
         if cfg.family == "moe":

@@ -134,10 +134,10 @@ def _attn_kwargs(cfg: ModelConfig, mode: str, window=None):
 
 
 def _dense_block(p, x, cfg: ModelConfig, mode="causal", window=None,
-                 positions=None, segment_ids=None):
+                 positions=None, segment_ids=None, span_ids=None):
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
     x = x + attention(p["attn"], h, positions=positions,
-                      segment_ids=segment_ids,
+                      segment_ids=segment_ids, span_ids=span_ids,
                       **_attn_kwargs(cfg, mode, window))
     h = rms_norm(p["ln2"], x, cfg.norm_eps)
     x = x + mlp(p["mlp"], h, cfg.activation)
@@ -145,10 +145,10 @@ def _dense_block(p, x, cfg: ModelConfig, mode="causal", window=None,
 
 
 def _moe_block(p, x, cfg: ModelConfig, mode="causal", window=None,
-               positions=None, segment_ids=None):
+               positions=None, segment_ids=None, span_ids=None):
     h = rms_norm(p["ln1"], x, cfg.norm_eps)
     x = x + attention(p["attn"], h, positions=positions,
-                      segment_ids=segment_ids,
+                      segment_ids=segment_ids, span_ids=span_ids,
                       **_attn_kwargs(cfg, mode, window))
     h = rms_norm(p["ln2"], x, cfg.norm_eps)
     out, aux = moe_mod.moe_ffn(p["moe"], h, top_k=cfg.moe.top_k,

@@ -49,11 +49,14 @@ def shard_sequence(x: jnp.ndarray, degree: int, rank: int, axis: int = 1,
 
 
 def _partial_update(carry, q, k, v, q_pos, k_pos, mode: str,
-                    window: Optional[int], q_seg=None, k_seg=None):
+                    window: Optional[int], q_seg=None, k_seg=None,
+                    q_span=None, k_span=None):
     """One online-softmax accumulation step. q:[B,S,Hkv,G,D] fp32-scaled,
     k/v:[B,T,Hkv,D]. carry = (m, l, acc). `q_seg`/`k_seg` ([B,S]/[B,T]
     int32, -1 = padding) restrict attention to same-segment pairs —
-    the packed-varlen mode; k_seg arrived with this hop's KV shard."""
+    the packed-varlen mode; `q_span`/`k_span` (-1 = causal) add the
+    mixed modality mask (same-id bidirectional blocks attend forward);
+    k_seg/k_span arrived with this hop's KV shard."""
     m, l, acc = carry
     s = jnp.einsum("bskgd,btkd->bskgt", q, k.astype(jnp.float32))
     mask = k_pos[:, None, :] <= q_pos[:, :, None]  # [B,S,T]
@@ -61,6 +64,9 @@ def _partial_update(carry, q, k, v, q_pos, k_pos, mode: str,
         mask = jnp.ones_like(mask)
     elif mode == "sliding":
         mask &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if q_span is not None and mode != "full":
+        mask |= (q_span[:, :, None] >= 0) \
+            & (q_span[:, :, None] == k_span[:, None, :])
     if q_seg is not None:
         mask &= (q_seg[:, :, None] == k_seg[:, None, :]) \
             & (q_seg >= 0)[:, :, None]
@@ -77,7 +83,7 @@ def _partial_update(carry, q, k, v, q_pos, k_pos, mode: str,
 
 def ring_attention(q, k, v, q_pos, *, axis_name: str,
                    mode: str = "causal", window: Optional[int] = None,
-                   q_seg=None) -> jax.Array:
+                   q_seg=None, q_span=None) -> jax.Array:
     """Executed INSIDE shard_map. q:[B,S_loc,H,D], k/v:[B,S_loc,Hkv,D],
     q_pos:[B,S_loc] global positions of the local shard.
 
@@ -91,6 +97,12 @@ def ring_attention(q, k, v, q_pos, *, axis_name: str,
     matter which rank currently holds the shard. Positions are
     per-segment (reset at each boundary); the causal comparison is only
     consulted for same-segment pairs, where it is exact.
+
+    `q_span` ([B,S_loc] int32, -1 = causal) is the modality table of
+    the local shard: same-id tokens form one bidirectional block
+    (vision frame / audio window) that attends FORWARD within itself.
+    Like segments and positions, the table rides every ppermute hop, so
+    a block sharded across ranks stays bidirectional end to end.
     """
     d = compat.axis_size(axis_name)
     B, S, H, Dh = q.shape
@@ -105,18 +117,25 @@ def ring_attention(q, k, v, q_pos, *, axis_name: str,
 
     k_cur, v_cur, kpos_cur = k, v, q_pos
     kseg_cur = q_seg
+    kspan_cur = q_span
     perm = [(i, (i - 1) % d) for i in range(d)]
     for hop in range(d):
         carry = _partial_update(carry, qg, k_cur, v_cur, q_pos, kpos_cur,
                                 mode, window, q_seg=q_seg,
-                                k_seg=kseg_cur)
+                                k_seg=kseg_cur, q_span=q_span,
+                                k_span=kspan_cur)
         if hop != d - 1:
-            if q_seg is None:
-                k_cur, v_cur, kpos_cur = jax.lax.ppermute(
-                    (k_cur, v_cur, kpos_cur), axis_name, perm)
-            else:
-                k_cur, v_cur, kpos_cur, kseg_cur = jax.lax.ppermute(
-                    (k_cur, v_cur, kpos_cur, kseg_cur), axis_name, perm)
+            # the hop carries exactly the tables in use: positions
+            # always, the segment and modality tables when present
+            extras = (() if q_seg is None else (kseg_cur,)) \
+                + (() if q_span is None else (kspan_cur,))
+            moved = jax.lax.ppermute((k_cur, v_cur, kpos_cur) + extras,
+                                     axis_name, perm)
+            k_cur, v_cur, kpos_cur = moved[:3]
+            if q_seg is not None:
+                kseg_cur = moved[3]
+            if q_span is not None:
+                kspan_cur = moved[-1]
     m, l, acc = carry
     o = acc / jnp.maximum(l[..., None], 1e-30)
     return o.reshape(B, S, H, Dh).astype(q.dtype)

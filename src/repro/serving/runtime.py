@@ -152,16 +152,32 @@ class ServingEngine:
             ("gprefill", cfg.arch_id, rows, Sb, T),
             lambda: jax.jit(fn))
 
-    def _chunk_prefill(self, Cb: int, T: int):
+    def _chunk_prefill(self, Cb: int, T: int, with_spans: bool = False):
         import jax
         from ..models.model import prefill_chunk
         cfg = self.cfg
 
-        def fn(params, cache, toks, start):
-            return prefill_chunk(params, cfg, cache, toks, start)
-        return self._exe(
-            ("cprefill", cfg.arch_id, Cb, T),
-            lambda: jax.jit(fn))
+        if with_spans:
+            def fn(params, cache, toks, start, span_ids, cache_span_ids):
+                return prefill_chunk(params, cfg, cache, toks, start,
+                                     span_ids=span_ids,
+                                     cache_span_ids=cache_span_ids)
+            key = ("cprefill", cfg.arch_id, Cb, T, "spans")
+        else:
+            def fn(params, cache, toks, start):
+                return prefill_chunk(params, cfg, cache, toks, start)
+            key = ("cprefill", cfg.arch_id, Cb, T)
+        return self._exe(key, lambda: jax.jit(fn))
+
+    def _span_row(self, request: ServeRequest, T: int) -> np.ndarray:
+        """[1,T] cache-row modality table for one request: absolute
+        positions of its bidirectional blocks, -1 elsewhere (including
+        the generation region — decode is causal)."""
+        from ..core.packing import fill_modality_row
+        row = np.full((1, T), -1, np.int32)
+        fill_modality_row(row[0], request.spans, 0,
+                          min(request.prompt_len, T), 0)
+        return row
 
     # -- staging caches --------------------------------------------------
     def _fresh_cache(self, request: ServeRequest, T: int):
@@ -192,7 +208,11 @@ class ServingEngine:
         for c in group.chunks:
             st = sched.states[c.request_id]
             if (c.start == 0 and c.length == st.prefill_target
-                    and not self.exact_prefill):
+                    and not self.exact_prefill
+                    and st.request.spans is None):
+                # span-bearing prompts always take the chunked path so
+                # their bidirectional blocks are masked (the co-batched
+                # one-shot prefill is causal-only)
                 one_shot.append(c)
             else:
                 chunked.append(c)
@@ -250,9 +270,18 @@ class ServingEngine:
             toks = np.zeros((1, Cb), np.int32)
             toks[0, :c.length] = \
                 st.request.tokens[c.start:c.start + c.length]
-            cache = self._chunk_prefill(Cb, T)(
-                self.params, staging[c.request_id], jnp.asarray(toks),
-                c.start)
+            if st.request.spans is not None:
+                row = self._span_row(st.request, T)
+                cs = np.full((1, Cb), -1, np.int32)
+                cs[0, :c.length] = row[0, c.start:c.start + c.length]
+                cache = self._chunk_prefill(Cb, T, with_spans=True)(
+                    self.params, staging[c.request_id],
+                    jnp.asarray(toks), c.start, jnp.asarray(cs),
+                    jnp.asarray(row))
+            else:
+                cache = self._chunk_prefill(Cb, T)(
+                    self.params, staging[c.request_id],
+                    jnp.asarray(toks), c.start)
             # pos is owned by the bookkeeping here, not the padded chunk
             cache = {**cache,
                      "pos": jnp.asarray(c.start + c.length, jnp.int32)}

@@ -27,7 +27,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from ..core.cost_model import SeqInfo
+from ..core.cost_model import SeqInfo, slice_spans
 from ..core.scheduler import ExecutionPlan
 from .kv_cache import KVCacheManager
 
@@ -46,6 +46,12 @@ class ServeRequest:
     deadline_s: Optional[float] = None  # completion deadline (offset)
     eos_id: Optional[int] = None        # early-stop token id
     eta: float = 0.0                    # mask-efficiency factor (Eq. 8)
+    #: modality layout of the prompt (ModalitySpan tuple; None = pure
+    #: causal text). Span-bearing requests are prefetched through the
+    #: span-aware chunked-prefill path so bidirectional vision/audio
+    #: blocks are masked correctly, and the planner sees per-chunk
+    #: derived eta instead of one scalar per request.
+    spans: Optional[tuple] = None
     #: audio family only: encoder frames [F, d_model] (synthesized from
     #: the engine seed when None — mirroring Engine.serve)
     frames: Optional[np.ndarray] = None
@@ -240,15 +246,29 @@ class ContinuousBatchingScheduler:
         return admitted
 
     # -- prefill planning ------------------------------------------------
+    def _chunk_len(self, st: RequestState) -> int:
+        """Next chunk length for one request: at most `prefill_chunk`,
+        but snapped FORWARD to the end of any bidirectional modality
+        span the boundary would split — the chunk-level invariant that
+        makes span-aware chunked prefill exact (a vision block's K/V
+        must all be resident before any of its queries run)."""
+        remaining = st.prefill_target - st.prefill_pos
+        end = st.prefill_pos + min(self.prefill_chunk, remaining)
+        for sp in st.request.spans or ():
+            if (sp.attn == "bidirectional"
+                    and sp.start < end < sp.start + sp.length):
+                end = min(sp.start + sp.length, st.prefill_target)
+                break
+        return end - st.prefill_pos
+
     def _next_chunks(self) -> List[PrefillChunk]:
         chunks = []
         for rid, st in sorted(self.states.items()):
             if st.status != PREFILL:
                 continue
-            remaining = st.prefill_target - st.prefill_pos
             chunks.append(PrefillChunk(
                 request_id=rid, start=st.prefill_pos,
-                length=min(self.prefill_chunk, remaining)))
+                length=self._chunk_len(st)))
             if len(chunks) >= self.max_prefill_seqs:
                 break
         return chunks
@@ -264,10 +284,20 @@ class ContinuousBatchingScheduler:
         if not chunks:
             return [], None
         by_id = {c.request_id: c for c in chunks}
-        seqs = [SeqInfo(length=c.length,
-                        eta=self.states[c.request_id].request.eta,
-                        seq_id=c.request_id)
-                for c in chunks]
+
+        def chunk_info(c: PrefillChunk) -> SeqInfo:
+            req = self.states[c.request_id].request
+            if req.spans:
+                # span-bearing request: the chunk's OWN layout drives
+                # the derived eta the planner costs, not the request's
+                # whole-prompt scalar
+                return SeqInfo(length=0, seq_id=c.request_id,
+                               spans=slice_spans(req.spans, c.start,
+                                                 c.length))
+            return SeqInfo(length=c.length, eta=req.eta,
+                           seq_id=c.request_id)
+
+        seqs = [chunk_info(c) for c in chunks]
         plan = self.planner.plan(seqs)
         plan.validate(seqs, n_ranks=self.planner.n_ranks,
                       cost_model=self.planner.cm,

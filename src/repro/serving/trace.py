@@ -1,12 +1,17 @@
 """Synthetic serving traces from the paper's length distributions.
 
-The same truncated-lognormal video-duration model that drives training
-heterogeneity (core/distributions.py, paper Fig. 1) generates serving
-prompt lengths — a request's "prompt" stands in for a multimodal context
-whose token count follows the dataset's long tail. Output lengths and
-Poisson arrivals are drawn independently so a trace exercises both
-dimensions continuous batching exploits: ragged prefill cost and ragged
-decode lifetimes.
+The same dataset profiles that drive training heterogeneity
+(core/dataset_profiles.py, paper Fig. 1) generate serving prompts — a
+request's "prompt" stands in for a multimodal context whose token count
+follows the dataset's long tail, and whose MODALITY LAYOUT follows the
+dataset's span convention (interleaved vision frames for OpenVid/
+InternVid, an audio-prefix window for MSRVTT). Requests therefore carry
+`ModalitySpan`s: the serving scheduler plans chunked prefill against
+per-chunk derived eta and masks bidirectional blocks correctly, instead
+of treating every prompt as causal text. Output lengths and Poisson
+arrivals are drawn independently so a trace exercises both dimensions
+continuous batching exploits: ragged prefill cost and ragged decode
+lifetimes.
 """
 from __future__ import annotations
 
@@ -14,7 +19,9 @@ from typing import List, Optional
 
 import numpy as np
 
-from ..core.distributions import sample_batch
+from ..core.cost_model import (ATTN_CAUSAL, ModalitySpan, slice_spans,
+                               spans_eta)
+from ..core.distributions import sample_mm_batch
 from .scheduler import ServeRequest
 
 
@@ -31,6 +38,7 @@ def sample_trace(
     arrival_rate: Optional[float] = None,
     tokens_per_frame: int = 16,
     deadline_s: Optional[float] = None,
+    with_spans: bool = True,
 ) -> List[ServeRequest]:
     """Draw `n` requests with heterogeneous prompt/output lengths.
 
@@ -39,14 +47,20 @@ def sample_trace(
     with mean `mean_new_tokens` (clipped to max_new_tokens) — the
     classic heavy-tailed decode-lifetime model; arrivals are Poisson
     with `arrival_rate` requests/s (None = everything arrives at t=0,
-    the closed-batch case benchmarks use).
+    the closed-batch case benchmarks use). `with_spans=False` strips
+    the modality layout (legacy causal-prompt traces).
     """
-    infos = sample_batch(dataset, n, rng, max_tokens=max_prompt,
-                         tokens_per_frame=tokens_per_frame)
+    mms = sample_mm_batch(dataset, n, rng, max_tokens=max_prompt,
+                          tokens_per_frame=tokens_per_frame)
     arrival = 0.0
     out: List[ServeRequest] = []
-    for i, info in enumerate(infos):
-        prompt_len = max(min_prompt, min(info.length, max_prompt))
+    for i, mm in enumerate(mms):
+        prompt_len = max(min_prompt, min(mm.length, max_prompt))
+        spans = slice_spans(mm.spans, 0, min(prompt_len, mm.length))
+        if prompt_len > mm.length:
+            # min_prompt padding joins the trailing causal text
+            spans = spans + (ModalitySpan(
+                "text", mm.length, prompt_len - mm.length, ATTN_CAUSAL),)
         tokens = rng.integers(0, vocab, size=prompt_len, dtype=np.int32)
         new = int(np.clip(rng.geometric(1.0 / max(mean_new_tokens, 1)),
                           1, max_new_tokens))
@@ -56,5 +70,6 @@ def sample_trace(
             request_id=i, tokens=tokens, max_new_tokens=new,
             arrival_s=arrival,
             deadline_s=(arrival + deadline_s) if deadline_s else None,
-            eta=info.eta))
+            eta=spans_eta(spans),
+            spans=spans if with_spans else None))
     return out
