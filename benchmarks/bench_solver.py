@@ -1,14 +1,29 @@
-"""Tables 1 & 2 — scheduling / solver time vs GBS and vs rank count.
+"""Tables 1 & 2 — scheduling / solver time vs GBS and vs rank count —
+plus the Stage-2 allocator implementation sweep (PR 7).
 
 Paper: solver <= 86 ms (GBS=512, N=64); schedule < 1 s; both << the
 global-batch compute time.
+
+`solver_sweep` compares the three Stage-2 implementations on identical
+instances — `allocate_reference` (the original pure-Python DP, kept
+verbatim), `allocate` (vectorized cost table + Hankel-view DP rows) and
+`IncrementalAllocator` (vectorized + cross-batch warm starts on a
+perturbed-batch stream) — over K' in {64, 256, 512} x N in {8, 64}.
+Groups beyond one wave's rank budget (sum d_min <= N) are split with
+the scheduler's wave partitioner, exactly as DHPScheduler would run
+them, and every implementation is certified to return bit-identical
+degrees before its timing row is reported.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.core import (CostModel, DHPScheduler, analytic_coeffs,
-                        sample_batch)
+from repro.core import (CostModel, DHPScheduler, IncrementalAllocator,
+                        allocate, allocate_reference, analytic_coeffs,
+                        pack_sequences, sample_batch)
+from repro.core.scheduler import _feasible_waves
 
 CM = CostModel(analytic_coeffs(hidden=3584, n_layers=28, n_heads=28,
                                kv_heads=4, ffn=18944, vocab=152000))
@@ -47,6 +62,94 @@ def table2_vs_ranks(gbs: int = 512, seed: int = 0):
     return rows
 
 
+def _unit_groups(kprime, n_ranks, rng):
+    """K' single-sequence atomic groups with memory-derived d_min
+    (clamped to N so every instance is feasible)."""
+    import math
+
+    from repro.core import AtomicGroup
+
+    seqs = sample_batch("openvid", kprime, rng, max_tokens=65536)
+    c = CM.coeffs
+    e_act = BUDGET - c.m_ms
+    groups = []
+    for s in seqs:
+        need = s.length * c.m_token
+        d_min = max(1, min(n_ranks, math.ceil(need / e_act)))
+        groups.append(AtomicGroup(seqs=[s], d_min=d_min,
+                                  capacity=d_min * e_act, used=need))
+    return groups
+
+
+def _perturbed(waves):
+    """Suffix-perturb each wave: bump the LAST group's sequence length
+    by one token (same d_min, so the rank total — and with it every
+    earlier DP row — stays warm-start-reusable)."""
+    import dataclasses
+
+    from repro.core import AtomicGroup
+
+    out = []
+    for w in waves:
+        w2 = list(w)
+        g = w2[-1]
+        s = dataclasses.replace(g.seqs[0], length=g.seqs[0].length + 1)
+        w2[-1] = AtomicGroup(seqs=[s] + list(g.seqs[1:]), d_min=g.d_min,
+                             capacity=g.capacity, used=g.used)
+        out.append(w2)
+    return out
+
+
+def solver_sweep(report, *, kprimes=(64, 256, 512), ranks=(8, 64),
+                 repeats=3, stream=8, seed=0):
+    """Time the three Stage-2 implementations on an alternating stream
+    of `stream` (original | suffix-perturbed) instances — the
+    incremental allocator's intended consecutive-batch workload — and
+    certify bit-identical degrees against the legacy solver."""
+    tf = CM.group_time
+    for n in ranks:
+        for kp in kprimes:
+            rng = np.random.default_rng(seed)
+            waves = _feasible_waves(_unit_groups(kp, n, rng), n)
+            waves_b = _perturbed(waves)
+
+            def run_stream(solve):
+                t0 = time.perf_counter()
+                out = []
+                for i in range(stream):
+                    ws = waves if i % 2 == 0 else waves_b
+                    out.append([solve(w) for w in ws])
+                return time.perf_counter() - t0, out
+
+            best, outs = {}, {}
+            inc = IncrementalAllocator()
+            impls = (("legacy", lambda w: allocate_reference(w, n, tf)),
+                     ("vec", lambda w: allocate(w, n, tf)),
+                     ("inc", lambda w: inc(w, n, tf)))
+            for name, solve in impls:
+                b = float("inf")
+                for _ in range(repeats):
+                    dt, out = run_stream(solve)
+                    b = min(b, dt)
+                best[name], outs[name] = b, out
+            same = all(
+                a.degrees == r.degrees and a.makespan == r.makespan
+                for impl in ("vec", "inc")
+                for sa, sr in zip(outs[impl], outs["legacy"])
+                for a, r in zip(sa, sr))
+            n_solves = stream * len(waves)
+            us = {k: v / n_solves * 1e6 for k, v in best.items()}
+            tag = f"solver/sweep_k{kp}_n{n}"
+            report(f"{tag}/legacy_us", us["legacy"],
+                   f"waves={len(waves)} per-DP-solve us, pure-Python")
+            report(f"{tag}/vec_us", us["vec"],
+                   f"speedup={us['legacy'] / max(us['vec'], 1e-9):.1f}x "
+                   f"identical={same}")
+            report(f"{tag}/inc_us", us["inc"],
+                   f"speedup={us['legacy'] / max(us['inc'], 1e-9):.1f}x "
+                   f"warm-start stream identical={same}")
+
+
 def run(report):
     for r in table1_vs_gbs():
         report(f"table1/solver_gbs{r['gbs']}", r["solver_time_ms"] * 1e3,
@@ -57,3 +160,10 @@ def run(report):
         report(f"table2/solver_n{r['ranks']}", r["solver_time_ms"] * 1e3,
                f"schedule={r['schedule_time_ms']:.0f}ms "
                f"compute={r['computing_time_s']:.2f}s")
+    solver_sweep(report)
+
+
+def run_smoke(report):
+    """CI subset: one K' per rank count, short stream."""
+    solver_sweep(report, kprimes=(64,), ranks=(8, 64), repeats=2,
+                 stream=4)

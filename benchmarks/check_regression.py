@@ -7,6 +7,20 @@ gate trips when the median regresses by more than `--threshold` (default
 1.2 = +20%); when no baseline exists — or the baseline is the file being
 checked — it skips cleanly so the first PR can bootstrap the trajectory.
 
+Two further gates (PR 7, millisecond-class planning):
+
+  * `*/allocate_us` — the Stage-2 allocator's per-batch time. Gated by
+    ratio vs the baseline's median when the baseline carries the rows;
+    when it does not (baselines predating PR 7), the median must stay
+    under `--allocate-budget` x `calibration/host_speed` — host_speed
+    times a FIXED legacy pure-Python DP solve, so "budget 1.5" is a
+    host-independent statement of "<= ~3 ms on the reference runner"
+    (where host_speed ~ 2 ms and the legacy allocator needed ~17 ms).
+  * `lookahead/speedup` (sync wall / pipelined wall) — the pipelined
+    planner must not lose to the synchronous one:
+    speedup >= 1 / `--lookahead-tolerance`. The default tolerance
+    absorbs the ~5% run-to-run noise of host-device step timing.
+
   PYTHONPATH=src python -m benchmarks.check_regression --new BENCH_pr3.json
 """
 from __future__ import annotations
@@ -30,6 +44,17 @@ def schedule_ms_values(rows: list) -> list:
             if r["name"].endswith("/schedule_ms")]
 
 
+def suffix_values(rows: list, suffix: str) -> list:
+    return [r["value"] for r in rows if r["name"].endswith(suffix)]
+
+
+def named_value(rows: list, name: str):
+    for r in rows:
+        if r["name"] == name:
+            return r["value"]
+    return None
+
+
 def calibration(rows: list):
     """The fixed-workload machine-speed row run.py always emits; when
     BOTH files carry it, medians are normalized by it so the gate
@@ -48,6 +73,12 @@ def main() -> int:
                     help="committed baseline files to compare against")
     ap.add_argument("--threshold", type=float, default=1.2,
                     help="max allowed new/old median ratio")
+    ap.add_argument("--allocate-budget", type=float, default=1.5,
+                    help="absolute Stage-2 budget (x host_speed) when "
+                         "the baseline has no */allocate_us rows")
+    ap.add_argument("--lookahead-tolerance", type=float, default=1.05,
+                    help="pipelined step wall may exceed sync by at "
+                         "most this factor")
     args = ap.parse_args()
 
     new_abs = os.path.abspath(args.new)
@@ -87,9 +118,51 @@ def main() -> int:
     print(f"median schedule_ms: {med_old:.4g} ({baseline}) -> "
           f"{med_new:.4g} ({args.new}) [{unit}]; ratio {ratio:.3f} "
           f"(threshold {args.threshold})")
+    failed = False
     if ratio > args.threshold:
         print(f"FAIL: scheduling latency regressed "
               f">{(args.threshold - 1) * 100:.0f}%")
+        failed = True
+
+    # ---- Stage-2 allocator gate (*/allocate_us) ----------------------
+    alloc_new = suffix_values(new_rows, "/allocate_us")
+    if alloc_new:
+        med_a_new = statistics.median(alloc_new)
+        alloc_old = suffix_values(old_rows, "/allocate_us")
+        if alloc_old:
+            med_a_old = statistics.median(alloc_old)
+            a_new, a_old = med_a_new, med_a_old
+            if cal_new and cal_old:
+                a_new, a_old = a_new / cal_new, a_old / cal_old
+            a_ratio = a_new / a_old if a_old > 0 else float("inf")
+            print(f"median allocate_us: {med_a_old:.4g} ({baseline}) "
+                  f"-> {med_a_new:.4g} ({args.new}); normalized ratio "
+                  f"{a_ratio:.3f} (threshold {args.threshold})")
+            if a_ratio > args.threshold:
+                print("FAIL: Stage-2 allocate time regressed")
+                failed = True
+        elif cal_new:
+            # first PR carrying the rows: absolute budget in units of
+            # the fixed legacy-DP calibration solve
+            norm = med_a_new / cal_new
+            print(f"median allocate_us: {med_a_new:.4g} = {norm:.3f} x "
+                  f"host_speed (budget {args.allocate_budget}; no "
+                  f"allocate_us rows in {baseline})")
+            if norm > args.allocate_budget:
+                print("FAIL: Stage-2 allocate time over absolute budget")
+                failed = True
+
+    # ---- lookahead gate (pipelined must not lose to sync) ------------
+    speedup = named_value(new_rows, "lookahead/speedup")
+    if speedup is not None:
+        floor = 1.0 / args.lookahead_tolerance
+        print(f"lookahead/speedup: {speedup:.3f} (floor {floor:.3f})")
+        if speedup < floor:
+            print("FAIL: pipelined lookahead lost to synchronous "
+                  "planning beyond tolerance")
+            failed = True
+
+    if failed:
         return 1
     print("ok")
     return 0

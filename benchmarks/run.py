@@ -30,10 +30,15 @@ def _calibration_row(report) -> None:
     Measured as the MIN over 7 repeats: the minimum of a fixed
     workload estimates machine speed free of contention spikes (a
     single cold sample was observed to swing ~2x between runs, which
-    swung the gate's normalized medians with it)."""
+    swung the gate's normalized medians with it).
+
+    Times `allocate_reference` — the legacy pure-Python DP, kept
+    verbatim — NOT the vectorized `allocate`: the normalizer must mean
+    the same thing in every BENCH_*.json ever committed, and swapping
+    the solver under it would silently rescale all older baselines."""
     import time
 
-    from repro.core import allocate
+    from repro.core import allocate_reference as allocate
     from repro.core.cost_model import SeqInfo
     from repro.core.packing import AtomicGroup
 
@@ -79,9 +84,12 @@ def main() -> None:
     _calibration_row(report)
 
     if args.smoke:
-        from . import bench_end_to_end, bench_kernels, bench_serving
+        from . import (bench_end_to_end, bench_kernels, bench_serving,
+                       bench_solver)
         mods = [("end_to_end[smoke]",
                  lambda r: bench_end_to_end.run_smoke(r)),
+                ("solver[smoke]",
+                 lambda r: bench_solver.run_smoke(r)),
                 ("serving[smoke]",
                  lambda r: bench_serving.run_smoke(r)),
                 ("kernels[smoke]",

@@ -63,6 +63,18 @@ class StepMetrics:
     #: ..}); sequences without span structure count as "text"
     modality_tokens: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    #: Stage-2 allocator time for this plan (cost table + DP), in us —
+    #: the millisecond-class-planning budget check_regression gates
+    allocate_us: float = 0.0
+    #: which planning path produced the plan: "full" | "incremental"
+    #: (warm-started DP suffix) | "cache" (PlanCache hit)
+    replan_mode: str = "full"
+    #: mean next-token NLL per label-token modality class for
+    #: span-bearing batches ({"text": .., "vision": ..}). Classes whose
+    #: labels are excluded from the TRAINING loss (bidirectional spans)
+    #: still report their NLL here for monitoring.
+    modality_loss: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def summary(self) -> str:
         cached = " cached" if self.plan_cache_hit else ""
@@ -239,6 +251,10 @@ class Engine:
             plan_cache_hit=plan.from_cache,
             groups_reconfigured=plan.delta.n_reconfigured,
             modality_tokens=mod_tokens,
+            allocate_us=plan.stage_ms.get("allocate", 0.0) * 1e3,
+            replan_mode=plan.replan_mode,
+            modality_loss=dict(self.executor.last_run_stats.get(
+                "modality_loss", {})),
         )
         self._step += 1
         return metrics
@@ -247,7 +263,8 @@ class Engine:
     def train(self, loader: Optional[Iterable[RaggedBatch]] = None, *,
               steps: int = 10, dataset: str = "openvid",
               global_batch: int = 8, max_tokens: int = 512,
-              tokens_per_frame: int = 16, lookahead: bool = True,
+              tokens_per_frame: int = 16,
+              lookahead: Union[bool, int] = True,
               plan_log: Optional[List[ExecutionPlan]] = None,
               log=None) -> List[StepMetrics]:
         """The single training driver: heterogeneous batches -> strategy
@@ -257,8 +274,12 @@ class Engine:
         `lookahead=True` (default) runs the planner pipeline: a
         background host thread plans batch t+1 while devices execute
         batch t, and `StepMetrics.plan_overlap_ms` reports how much
-        planning latency that hid. `lookahead=False` is the synchronous
-        baseline — plan, then execute, back to back.
+        planning latency that hid. An int widens the window: batches
+        t+1..t+k are enqueued to the planner thread, which solves them
+        back-to-back sharing the scheduler's warm allocator state (the
+        batched-lookahead contract — see docs/api.md "Planner
+        performance"). `lookahead=False` is the synchronous baseline —
+        plan, then execute, back to back.
 
         `plan_log`: pass a list to receive every executed ExecutionPlan
         (the `--save-plans` trace)."""
@@ -273,33 +294,41 @@ class Engine:
         self.loader = loader
         it: Iterator[RaggedBatch] = iter(loader)
 
+        # lookahead depth: 0 = synchronous, k >= 1 = plans for batches
+        # t+1..t+k kept in flight on the planner thread.
+        depth = (1 if lookahead is True
+                 else 0 if lookahead is False else max(0, int(lookahead)))
         try:
             data = next(it)
         except StopIteration:
             return []
-        if lookahead:
+        n_fetched = 1
+        if depth:
             self.strategy.prepare(data.infos)
+        from collections import deque
+        queue: "deque[RaggedBatch]" = deque()   # fetched, plan in flight
         history: List[StepMetrics] = []
         for i in range(steps):
-            if lookahead:
+            if depth:
                 plan = self.strategy.collect()
                 overlap = max(
                     0.0, plan.schedule_ms - self.strategy.last_wait_ms)
             else:
                 plan = self.strategy.plan(data.infos)
                 overlap = 0.0
-            next_data = None
-            if i < steps - 1:
-                # Only prefetch while another step remains: consuming a
-                # batch (or popping a replay plan) that will never
-                # execute would desync resumable loaders and
-                # ReplayStrategy's cursor.
+            # Top up the prefetch window — but only with batches that
+            # WILL execute (n_fetched < steps): consuming a batch (or
+            # popping a replay plan) that never runs would desync
+            # resumable loaders and ReplayStrategy's cursor.
+            while n_fetched < steps and len(queue) < max(depth, 1):
                 try:
-                    next_data = next(it)
-                    if lookahead:
-                        self.strategy.prepare(next_data.infos)  # overlap
+                    nxt = next(it)
                 except StopIteration:
-                    pass
+                    break
+                queue.append(nxt)
+                n_fetched += 1
+                if depth:
+                    self.strategy.prepare(nxt.infos)  # overlap planning
             metrics = self.execute(plan, data)
             metrics.plan_overlap_ms = overlap
             if plan_log is not None:
@@ -307,9 +336,9 @@ class Engine:
             history.append(metrics)
             if log is not None:
                 log(metrics.summary())
-            if next_data is None:
+            if not queue:
                 break
-            data = next_data
+            data = queue.popleft()
         return history
 
     # -- serve ----------------------------------------------------------

@@ -17,11 +17,14 @@ Engine does automatically from its ClusterSpec.
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures
 import threading
 import time
 from typing import (Callable, Dict, List, Optional, Sequence as Seq,
                     Tuple, Union)
+
+import numpy as np
 
 from ..core.allocator import allocate_bruteforce, evaluate_degrees
 from ..core.cost_model import CostModel, SeqInfo, as_seq_infos
@@ -99,7 +102,10 @@ class Strategy:
             plan_cache if isinstance(plan_cache, PlanCache) else None)
         self._executor: Optional[
             concurrent.futures.ThreadPoolExecutor] = None
-        self._pending: Optional[concurrent.futures.Future] = None
+        #: FIFO of in-flight background plans (lookahead window): each
+        #: prepare() appends a future, collect() pops the oldest.
+        self._pending: "collections.deque[concurrent.futures.Future]" = \
+            collections.deque()
         #: ms collect() actually blocked waiting for the background
         #: planner — the NON-hidden share of schedule_ms.
         self.last_wait_ms: float = 0.0
@@ -178,25 +184,42 @@ class Strategy:
         raise NotImplementedError
 
     # -- async producer-consumer ----------------------------------------
+    @property
+    def n_pending(self) -> int:
+        """In-flight background plans (the current lookahead depth)."""
+        return len(self._pending)
+
     def prepare(self, seqs: Seq[SeqInfo]) -> None:
-        """Kick off planning of the NEXT batch on the host thread."""
+        """Kick off planning of the NEXT batch on the host thread.
+
+        May be called several times before the matching collect()s: the
+        futures form a FIFO lookahead window, all served by ONE planner
+        thread so a window of batches t+1..t+k is solved back-to-back —
+        consecutive solves share the scheduler's incremental-allocator
+        state (warm DP rows, cost tables), which is what makes the
+        batched lookahead cheap (see docs/api.md "Planner
+        performance")."""
         if self._executor is None:
             self._executor = concurrent.futures.ThreadPoolExecutor(
                 max_workers=1)
-        self._pending = self._executor.submit(self.plan, list(seqs))
+        self._pending.append(self._executor.submit(self.plan, list(seqs)))
+
+    def prepare_many(self, batches: Seq[Seq[SeqInfo]]) -> None:
+        """Enqueue a whole lookahead window t+1..t+k at once."""
+        for seqs in batches:
+            self.prepare(seqs)
 
     def collect(self) -> ExecutionPlan:
-        """Block until the prepared plan is ready (usually already is).
+        """Block until the OLDEST prepared plan is ready (usually is).
 
         Records `last_wait_ms`, the time this call actually blocked —
         `schedule_ms - last_wait_ms` is the planning latency hidden
         behind device execution (StepMetrics.plan_overlap_ms)."""
-        if self._pending is None:
+        if not self._pending:
             raise RuntimeError("collect() without a prior prepare()")
         t0 = time.perf_counter()
-        plan = self._pending.result()
+        plan = self._pending.popleft().result()
         self.last_wait_ms = (time.perf_counter() - t0) * 1e3
-        self._pending = None
         return plan
 
     # -- feedback --------------------------------------------------------
@@ -207,6 +230,7 @@ class Strategy:
         ignored; OracleStrategy learns its cost table from these."""
 
     def close(self) -> None:
+        self._pending.clear()
         if self._executor is not None:
             self._executor.shutdown(wait=False)
             self._executor = None
@@ -325,6 +349,9 @@ class MeasuredCostModel(CostModel):
             if pred > 0:
                 self._ratio_sum += seconds / pred
                 self._ratio_n += 1
+            # predictions just changed: invalidate warm-started
+            # allocator states keyed to the previous version
+            self.cost_version += 1
 
     def group_time(self, seqs, degree):
         if not seqs:
@@ -337,6 +364,12 @@ class MeasuredCostModel(CostModel):
             ratio = (self._ratio_sum / self._ratio_n
                      if self._ratio_n else 1.0)
         return self._base.group_time(seqs, degree) * ratio
+
+    def group_time_vector(self, seqs, degrees):
+        """Measured lookups are per-(bucket, degree) — no closed form to
+        vectorize, so the bulk cost-table path degrades to scalar calls
+        (still one call per table CELL, not per DP probe)."""
+        return np.array([self.group_time(seqs, int(d)) for d in degrees])
 
 
 @register_strategy("oracle")

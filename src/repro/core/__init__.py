@@ -8,8 +8,9 @@ Public API:
   Profiler                                      (coefficient fitting)
   ClusterSimulator / end_to_end_table           (paper-table reproduction)
 """
-from .allocator import (Allocation, allocate, allocate_bruteforce,
-                        evaluate_degrees)
+from .allocator import (Allocation, IncrementalAllocator, allocate,
+                        allocate_bruteforce, allocate_many,
+                        allocate_reference, evaluate_degrees)
 from .cost_model import (CostCoeffs, CostModel, Hardware, MMSequence,
                          ModalitySpan, SeqInfo, analytic_coeffs,
                          as_seq_infos, slice_spans, spans_eta,
@@ -30,7 +31,9 @@ from .scheduler import (PLAN_IR_VERSION, DHPScheduler, ExecutionPlan,
 from .simulator import ClusterSimulator, end_to_end_table, scaling_table
 
 __all__ = [
-    "Allocation", "allocate", "allocate_bruteforce", "evaluate_degrees",
+    "Allocation", "IncrementalAllocator", "allocate",
+    "allocate_bruteforce", "allocate_many", "allocate_reference",
+    "evaluate_degrees",
     "CostCoeffs", "CostModel", "Hardware", "SeqInfo", "analytic_coeffs",
     "MMSequence", "ModalitySpan", "as_seq_infos", "slice_spans",
     "spans_eta", "synthesize_spans",

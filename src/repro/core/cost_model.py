@@ -41,6 +41,8 @@ import dataclasses
 import math
 from typing import Callable, Optional, Sequence as Seq, Tuple
 
+import numpy as np
+
 #: valid ModalitySpan.attn values
 ATTN_CAUSAL = "causal"
 ATTN_BIDIRECTIONAL = "bidirectional"
@@ -249,6 +251,11 @@ class Hardware:
 class CostModel:
     """Evaluates Eqs. (7)-(10) for a set of sequences under CP degree d."""
 
+    #: Bumped whenever the model's predictions may change (MeasuredCostModel
+    #: increments it on every record()). Warm-started allocator states key
+    #: on this so stale cost tables are never reused across model updates.
+    cost_version: int = 0
+
     def __init__(self, coeffs: CostCoeffs, hw: Hardware | None = None):
         self.coeffs = coeffs
         self.hw = hw or Hardware()
@@ -308,6 +315,35 @@ class CostModel:
         t_cpa = self.attn_compute_time(seqs, degree)
         t_cma = self.attn_comm_time(seqs, degree)
         return t_cp + t_cm - min(t_cpa, t_cma)
+
+    def group_time_vector(self, seqs: Seq[SeqInfo],
+                          degrees: np.ndarray) -> np.ndarray:
+        """Eq. 10 for ONE group at MANY CP degrees in a single call.
+
+        Bit-identical to ``[self.group_time(seqs, d) for d in degrees]``:
+        the per-group aggregates (sum of attn/linear weights, token count)
+        are reduced once with the same Python summation order the scalar
+        path uses, after which every remaining operation is an elementwise
+        float64 op whose IEEE semantics match the scalar expression
+        exactly. The vectorized allocator certifies this equivalence in
+        tests/test_allocator.py.
+        """
+        d = np.asarray(degrees, dtype=np.float64)
+        if not seqs:
+            return np.zeros(d.shape)
+        c = self.coeffs
+        # Aggregates, summed in the scalar path's order.
+        attn = c.a1 * sum(s.attn_weight for s in seqs)
+        lin = c.a2 * sum(s.linear_weight for s in seqs)
+        toks = c.a3 * sum(s.length for s in seqs)
+        t_cp = (attn + lin) / d + c.b1
+        t_cpa = attn / d
+        ring = np.where(d <= self.hw.ranks_per_node,
+                        self.hw.intra_bw, self.hw.inter_bw)
+        vol = toks * (d - 1.0) / d              # 0 at d=1, so no div issues
+        t_cm = np.where(d <= 1.0, 0.0, vol / ring + c.b2)
+        t_cma = np.where(d <= 1.0, 0.0, toks * (d - 1.0) / d / ring)
+        return t_cp + t_cm - np.minimum(t_cpa, t_cma)
 
     def time_fn(self) -> Callable[[Seq[SeqInfo], int], float]:
         return self.group_time

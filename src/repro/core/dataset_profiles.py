@@ -10,7 +10,10 @@ Layouts (how a clip's tokens are arranged into modality spans):
                      with causal text (OpenVid / InternVid style
                      frame-caption streams);
   * "audio_prefix" — one bidirectional audio window up front, followed
-                     by the causal caption (MSRVTT-style transcription).
+                     by the causal caption (MSRVTT-style transcription);
+  * "prefix"       — same geometry for any modality: one bidirectional
+                     block then causal text (image-QA's images-then-
+                     question convention).
 """
 from __future__ import annotations
 
@@ -20,6 +23,7 @@ from typing import Union
 
 LAYOUT_INTERLEAVED = "interleaved"
 LAYOUT_AUDIO_PREFIX = "audio_prefix"
+LAYOUT_PREFIX = "prefix"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,8 +50,31 @@ INTERNVID = DatasetProfile("internvid", mu=math.log(6.0), sigma=0.8,
                            min_s=1, max_s=128)
 OPENVID = DatasetProfile("openvid", mu=math.log(5.0), sigma=1.25,
                          min_s=1, max_s=512)
+# Image-QA (LLaVA-Instruct / VQAv2-style): "duration" counts IMAGES —
+# mostly single-image turns, occasionally multi-image (<= 4). Each image
+# is one bidirectional block of 576 tokens (CLIP ViT-L/14 @ 336px =
+# 24x24 patches, the LLaVA-1.5 projector output); ~80 causal text
+# tokens of question + answer. The near-degenerate length spread is the
+# point: DHP's win case is heterogeneity, and a homogeneous dataset
+# must not regress vs static parallelism.
+IMAGEQA = DatasetProfile("imageqa", mu=math.log(1.0), sigma=0.4,
+                         min_s=1, max_s=4, layout=LAYOUT_PREFIX,
+                         modality="vision", fps=1.0,
+                         tokens_per_frame=576, text_tokens=80)
+# Long-form speech recognition (LibriLight / earnings-call style):
+# clips of 30 s .. 15 min, median ~3 min. 25 audio tokens per second
+# (Whisper-style encoder: 50 frame/s mel front-end, 2x conv
+# downsampling), transcript ~400 causal text tokens. The heavy upper
+# tail (sigma 0.7 over minutes-long durations) stresses the allocator's
+# high-d_min path the video sets never reach.
+LONGAUDIO = DatasetProfile("longaudio", mu=math.log(180.0), sigma=0.7,
+                           min_s=30, max_s=900,
+                           layout=LAYOUT_AUDIO_PREFIX, modality="audio",
+                           fps=1.0, tokens_per_frame=25,
+                           text_tokens=400)
 
-PROFILES = {d.name: d for d in (MSRVTT, INTERNVID, OPENVID)}
+PROFILES = {d.name: d for d in (MSRVTT, INTERNVID, OPENVID,
+                                IMAGEQA, LONGAUDIO)}
 
 
 def get_profile(dataset: Union[str, DatasetProfile]) -> DatasetProfile:

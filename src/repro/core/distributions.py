@@ -25,8 +25,8 @@ import numpy as np
 from .cost_model import (ATTN_BIDIRECTIONAL, ATTN_CAUSAL, MMSequence,
                          ModalitySpan, SeqInfo)
 from .dataset_profiles import (LAYOUT_AUDIO_PREFIX, LAYOUT_INTERLEAVED,
-                               INTERNVID, MSRVTT, OPENVID, PROFILES,
-                               DatasetProfile, get_profile)
+                               LAYOUT_PREFIX, INTERNVID, MSRVTT, OPENVID,
+                               PROFILES, DatasetProfile, get_profile)
 
 #: legacy aliases — the tables moved to core/dataset_profiles.py
 VideoDataset = DatasetProfile
@@ -48,7 +48,8 @@ def _layout_spans(profile: DatasetProfile, vis: int, text: int,
             spans.append(ModalitySpan(mod, start, ln, attn))
             start += ln
 
-    if profile.layout == LAYOUT_AUDIO_PREFIX or vis == 0 or text == 0:
+    if (profile.layout in (LAYOUT_AUDIO_PREFIX, LAYOUT_PREFIX)
+            or vis == 0 or text == 0):
         add(profile.modality, vis, ATTN_BIDIRECTIONAL)
         add("text", text, ATTN_CAUSAL)
         return tuple(spans)

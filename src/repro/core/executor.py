@@ -61,7 +61,7 @@ from ..models.model import forward
 from ..parallel.compat import shard_map
 from ..training.optimizer import AdamW
 from .group_pool import GroupPool
-from .packing import flatten_group
+from .packing import MODALITY_CLASSES, flatten_group
 from .scheduler import ExecutionPlan
 
 #: families whose attention layers support block-diagonal segment masks;
@@ -70,11 +70,16 @@ from .scheduler import ExecutionPlan
 PACKABLE_FAMILIES = ("dense", "moe")
 
 
-def _masked_nll(logits, labels, mask):
+def _token_nll(logits, labels):
+    """Per-position next-token NLL (no masking applied)."""
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
-    nll = (logz - gold) * mask
+    return logz - gold
+
+
+def _masked_nll(logits, labels, mask):
+    nll = _token_nll(logits, labels) * mask
     return nll.sum(), mask.sum()
 
 
@@ -105,7 +110,8 @@ class DHPExecutor:
                 f" (needs segment-maskable attention + token-only batch)")
         self.packed = packed
         #: padding/compile telemetry of the most recent run_plan()
-        self.last_run_stats: Dict[str, float] = {}
+        #: (+ "modality_loss" sub-dict for span-bearing runs)
+        self.last_run_stats: Dict[str, Any] = {}
         #: executable-pool keys dispatched by the most recent run_plan(),
         #: in dispatch order — the replay bit-identity witness (a plan
         #: saved with --save-plans must reproduce these exactly).
@@ -113,38 +119,67 @@ class DHPExecutor:
 
     # ------------------------------------------------------------------
     def _build_grad_fn(self, mesh, with_spans: bool):
-        """(loss, grads) step over a sub-mesh; batch seq-axis sharded.
+        """(loss, grads[, modality nll table]) step over a sub-mesh;
+        batch seq-axis sharded.
 
         `with_spans` adds the modality_ids table (the mixed-mask
-        bidirectional-block table) to the sharded batch — only
-        span-bearing groups compile/run the span-masked attention
-        path; pure-causal groups keep the pre-span executable."""
+        bidirectional-block table), the `loss_mask` (labels inside
+        bidirectional spans carry no NLL — they attend their own
+        future) and the `modality_classes` label table to the sharded
+        batch — only span-bearing groups compile/run the span-masked
+        attention + masked-loss path; pure-causal groups keep the
+        pre-span executable (and its exact numerics). Span-bearing
+        steps return a [n_classes, 2] (nll_sum, label_count) aux table
+        per MODALITY_CLASSES entry, reduced over the cp axis."""
         cfg = self.cfg_cp
 
         def build():
             pspec = P()     # params replicated on the sub-mesh (demo TP=1)
             keys = ("tokens", "labels", "mask", "positions")
             if with_spans:
-                keys = keys + ("modality_ids",)
+                keys = keys + ("modality_ids", "loss_mask",
+                               "modality_classes")
             if self.packed:
                 keys = keys + ("segment_ids",)
             bspec = {k: P(None, "cp") for k in keys}
 
             def shard_loss(params, batch):
-                logits, aux = forward(params, cfg, batch)
-                s, c = _masked_nll(logits, batch["labels"], batch["mask"])
-                s = jax.lax.psum(s, "cp")
-                c = jax.lax.psum(c, "cp")
-                return s / jnp.maximum(c, 1.0)
+                logits, _ = forward(params, cfg, batch)
+                if not with_spans:
+                    s, c = _masked_nll(logits, batch["labels"],
+                                       batch["mask"])
+                    s = jax.lax.psum(s, "cp")
+                    c = jax.lax.psum(c, "cp")
+                    return s / jnp.maximum(c, 1.0)
+                nll = _token_nll(logits, batch["labels"])
+                lm = batch["loss_mask"]
+                s = jax.lax.psum((nll * lm).sum(), "cp")
+                c = jax.lax.psum(lm.sum(), "cp")
+                # per-modality NLL over ALL valid labels (base mask):
+                # classes excluded from the training loss still report
+                cls = batch["modality_classes"]
+                rows = []
+                for k in range(len(MODALITY_CLASSES)):
+                    mk = batch["mask"] * (cls == k)
+                    rows.append(jnp.stack([(nll * mk).sum(), mk.sum()]))
+                aux = jax.lax.psum(jnp.stack(rows), "cp")
+                # telemetry only — a symbolic-Zero tangent for aux
+                # would not transpose through shard_map
+                return s / jnp.maximum(c, 1.0), jax.lax.stop_gradient(aux)
 
             def loss_of(params, batch):
                 # params enter shard_map replicated (demo TP=1)
+                out_specs = (P(), P()) if with_spans else P()
                 return shard_map(
                     shard_loss, mesh=mesh,
-                    in_specs=(pspec, bspec), out_specs=P(),
+                    in_specs=(pspec, bspec), out_specs=out_specs,
                 )(params, batch)
 
             def fwd_bwd(params, batch):
+                if with_spans:
+                    (loss, aux), grads = jax.value_and_grad(
+                        loss_of, has_aux=True)(params, batch)
+                    return loss, grads, aux
                 loss, grads = jax.value_and_grad(loss_of)(params, batch)
                 return loss, grads
 
@@ -216,13 +251,17 @@ class DHPExecutor:
 
         `self.last_run_stats` always aggregates {real_tokens,
         padded_tokens, padding_efficiency, exe_misses, groups} for the
-        run — the benchmark/CI telemetry feed."""
+        run — the benchmark/CI telemetry feed. Span-bearing runs add
+        "modality_loss": {class name: mean NLL} over every class that
+        had at least one valid label (classes masked OUT of the
+        training loss, e.g. bidirectional vision spans, still report)."""
         import time as _time
         total_tokens = 0.0
         g_acc = None
         loss_acc = 0.0
-        agg = {"real_tokens": 0, "padded_tokens": 0, "exe_misses": 0,
-               "groups": 0}
+        aux_acc = None       # [n_classes, 2] (nll_sum, label_count)
+        agg: Dict[str, Any] = {"real_tokens": 0, "padded_tokens": 0,
+                               "exe_misses": 0, "groups": 0}
         # Rank slots come from the plan IR itself (including the
         # defensive wrap for oversubscribed micro-batches) so executor,
         # GroupDelta diffing and replay equality all agree on which rank
@@ -249,7 +288,11 @@ class DHPExecutor:
                         start, g.degree, len(seqs), bucket, with_spans)
                 self.last_exe_keys.append(key)
                 batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
-                n_tok = float(np_batch["mask"].sum())
+                # weight groups by LOSS tokens when a loss mask exists —
+                # bidirectional-span labels carry no NLL, so counting
+                # them would dilute the span-bearing groups' gradients
+                n_tok = float(np_batch.get(
+                    "loss_mask", np_batch["mask"]).sum())
                 agg["real_tokens"] += real
                 agg["padded_tokens"] += padded
                 agg["exe_misses"] += int(compiled)
@@ -271,7 +314,11 @@ class DHPExecutor:
                         "padding_efficiency": real / max(padded, 1),
                     })
                     handles.append((out, n_tok))
-            for (loss, grads), n_tok in handles:
+            for out, n_tok in handles:
+                loss, grads = out[0], out[1]
+                if len(out) > 2:           # span-bearing: modality aux
+                    a = np.asarray(out[2], np.float64)
+                    aux_acc = a if aux_acc is None else aux_acc + a
                 w = n_tok
                 total_tokens += w
                 loss_acc += float(loss) * w
@@ -281,7 +328,12 @@ class DHPExecutor:
                     np.add, g_acc, g_np)
         agg["padding_efficiency"] = (
             agg["real_tokens"] / max(agg["padded_tokens"], 1))
+        if aux_acc is not None:
+            agg["modality_loss"] = {
+                name: float(aux_acc[k, 0] / aux_acc[k, 1])
+                for k, name in enumerate(MODALITY_CLASSES)
+                if aux_acc[k, 1] > 0}
         self.last_run_stats = agg
-        grads = jax.tree.map(lambda a: jnp.asarray(a / total_tokens),
-                             g_acc)
-        return jnp.asarray(loss_acc / total_tokens), grads
+        denom = max(total_tokens, 1.0)
+        grads = jax.tree.map(lambda a: jnp.asarray(a / denom), g_acc)
+        return jnp.asarray(loss_acc / denom), grads

@@ -23,7 +23,7 @@ from collections import OrderedDict
 from typing import (Any, Callable, Dict, List, Optional, Sequence as Seq,
                     Tuple)
 
-from .allocator import Allocation, allocate
+from .allocator import Allocation, IncrementalAllocator, allocate
 from .cost_model import CostModel, ModalitySpan, SeqInfo
 from .packing import AtomicGroup, pack_sequences
 
@@ -140,6 +140,12 @@ class ExecutionPlan:
     # and per strategy from one code path.
     version: int = PLAN_IR_VERSION
     from_cache: bool = False   # True when a PlanCache hit produced this
+    replan_mode: str = "full"
+    # which planning path produced this plan: "full" (cold solve),
+    # "incremental" (warm-started DP suffix re-solve) or "cache"
+    # (PlanCache structural hit). Telemetry only — excluded from the
+    # structural hash, so plans from different paths still compare
+    # equal when their structure is equal.
     delta: Optional[GroupDelta] = None
     # group reconfiguration vs the previously executed plan; filled by
     # diff_plans (the Engine does it automatically before execution).
@@ -268,6 +274,7 @@ class ExecutionPlan:
             "solver_ms": self.solver_ms,
             "stage_ms": dict(self.stage_ms),
             "from_cache": self.from_cache,
+            "replan_mode": self.replan_mode,
             "micro_batches": [mb.to_json() for mb in self.micro_batches],
             "delta": self.delta.to_json() if self.delta else None,
             "seq_spans": (None if not self.seq_spans else {
@@ -292,6 +299,7 @@ class ExecutionPlan:
             stage_ms=dict(obj.get("stage_ms", {})),
             version=PLAN_IR_VERSION,
             from_cache=bool(obj.get("from_cache", False)),
+            replan_mode=str(obj.get("replan_mode", "full")),
             delta=(GroupDelta.from_json(obj["delta"])
                    if obj.get("delta") else None),
             seq_spans=(None if not obj.get("seq_spans") else {
@@ -474,7 +482,7 @@ class PlanCache:
             total_time_est=sum(m.makespan for m in micro),
             schedule_ms=0.0, solver_ms=0.0,
             strategy_name=cached_plan.strategy_name,
-            stage_ms={}, from_cache=True)
+            stage_ms={}, from_cache=True, replan_mode="cache")
         try:
             plan.validate(seqs, n_ranks=n_ranks, cost_model=cost_model,
                           mem_budget=mem_budget)
@@ -485,6 +493,29 @@ class PlanCache:
             return None
         self.hits += 1
         return plan
+
+    def nearest(self, seqs: Seq[SeqInfo]) -> Optional[ExecutionPlan]:
+        """The stored plan whose batch histogram is CLOSEST to `seqs`:
+        the exact-key entry when one exists, else the entry with the
+        largest multiset overlap of (length-bucket, eta, span-sig)
+        items. Unlike `lookup` this neither remaps seq_ids nor
+        validates — the result is a warm REFERENCE for incremental
+        replanning (which groups/degrees a near-identical batch used),
+        not an executable plan. Does not count as a hit or miss."""
+        k = self.key(seqs)
+        with self._lock:
+            entry = self._entries.get(k)
+            if entry is not None:
+                return entry[0]
+            if not self._entries:
+                return None
+            want = dict(k[1])
+            best, score = None, -1
+            for (_, items), (plan, _) in self._entries.items():
+                ov = sum(min(c, want.get(kk, 0)) for kk, c in items)
+                if ov > score:
+                    best, score = plan, ov
+            return best
 
     def store(self, seqs: Seq[SeqInfo], plan: ExecutionPlan) -> None:
         # Deep-copy through the IR so later telemetry mutations on the
@@ -570,6 +601,7 @@ class DHPScheduler:
         balance_packing: bool = True,
         serial_fallback: bool = True,
         allocator: Optional[Callable] = None,
+        incremental: bool = True,
     ):
         """`balance_packing` and `serial_fallback` are BEYOND-PAPER
         refinements (see EXPERIMENTS.md §Perf); disable both for the
@@ -577,13 +609,22 @@ class DHPScheduler:
 
         `allocator` swaps the Stage-2 solver (default: the 2D-DP
         `allocate`; pass `allocate_bruteforce` for the exact oracle —
-        only tractable on small waves)."""
+        only tractable on small waves).
+
+        `incremental` (default on, only with the default solver) keeps
+        one `IncrementalAllocator` per wave ordinal so consecutive
+        batches warm-start each other's DP: only suffix rows whose
+        atomic groups changed are re-solved. Plans are bit-equal to
+        the cold solve; `ExecutionPlan.replan_mode` reports which path
+        ran."""
         self.cm = cost_model
         self.n_ranks = n_ranks
         self.budget = mem_budget
         self.use_all_ranks = use_all_ranks
         self.balance_packing = balance_packing
         self.serial_fallback = serial_fallback
+        self.incremental = incremental and allocator is None
+        self._wave_solvers: Dict[int, IncrementalAllocator] = {}
         self.allocator = allocator if allocator is not None else allocate
         self.planner = MicroBatchPlanner(cost_model, n_ranks, mem_budget)
         import inspect
@@ -605,7 +646,12 @@ class DHPScheduler:
         micro_batches = self.planner.plan(seqs)
         t_micro = time.perf_counter()
         stage_ms = {"microbatch": (t_micro - t0) * 1e3,
-                    "pack": 0.0, "allocate": 0.0}
+                    "pack": 0.0, "allocate": 0.0,
+                    # the allocate split: cost-table build (time_fn
+                    # evaluation) vs the DP itself (+ backtrack)
+                    "allocate_cost": 0.0, "allocate_dp": 0.0}
+        wave_idx = 0
+        rows_reused = 0
         for mb in micro_batches:
             t_pack = time.perf_counter()
             all_groups = pack_sequences(
@@ -617,11 +663,22 @@ class DHPScheduler:
             # partition atomic groups into sequential feasible waves.
             for groups in _feasible_waves(all_groups, self.n_ranks):
                 t_alloc = time.perf_counter()
-                alloc: Allocation = self.allocator(
-                    groups, self.n_ranks, self.cm.group_time,
-                    **self._alloc_kwargs)
+                if self.incremental:
+                    solver = self._wave_solvers.setdefault(
+                        wave_idx, IncrementalAllocator())
+                    alloc: Allocation = solver(
+                        groups, self.n_ranks, self.cm.group_time,
+                        use_all_ranks=self.use_all_ranks)
+                else:
+                    alloc = self.allocator(
+                        groups, self.n_ranks, self.cm.group_time,
+                        **self._alloc_kwargs)
+                wave_idx += 1
+                rows_reused += alloc.rows_reused
                 stage_ms["allocate"] += (
                     time.perf_counter() - t_alloc) * 1e3
+                stage_ms["allocate_cost"] += alloc.cost_ms
+                stage_ms["allocate_dp"] += alloc.dp_ms
                 solver_ms += alloc.solver_ms
                 # BEYOND-PAPER: serial fallback. The DP runs the wave's
                 # groups CONCURRENTLY on disjoint rank sets (Eq. 2-6);
@@ -659,6 +716,7 @@ class DHPScheduler:
             solver_ms=solver_ms,
             strategy_name="dhp",
             stage_ms=stage_ms,
+            replan_mode="incremental" if rows_reused else "full",
         )
 
     # -- asynchronous producer-consumer API ----------------------------------

@@ -21,7 +21,7 @@ import numpy as np
 from ..configs.base import InputShape, ModelConfig
 from ..core.cost_model import SeqInfo
 from ..core.distributions import sample_batch
-from ..core.packing import fill_modality_row
+from ..core.packing import fill_loss_row, fill_modality_row
 
 
 @dataclasses.dataclass
@@ -88,13 +88,13 @@ def padded_batch(seqs: Seq[np.ndarray], bucket: int,
                  pad_id: int = 0,
                  spans: Optional[Seq] = None) -> Dict[str, np.ndarray]:
     """Pad ragged sequences to [n, bucket]: tokens/labels/mask/positions
-    + modality_ids when `spans` carries any layout (per-row
-    bidirectional-span table, -1 = causal/pad; `spans` is a
-    per-sequence list of ModalitySpan tuples, entries may be None).
-    Same mixed-mask semantics — and the same emit-only-when-present
-    rule — as the packed path, so packed and per-sequence execution
-    stay numerically identical and pure-causal batches skip the
-    span-masked attention path entirely."""
+    + modality_ids / loss_mask / modality_classes when `spans` carries
+    any layout (per-row bidirectional-span table, -1 = causal/pad;
+    `spans` is a per-sequence list of ModalitySpan tuples, entries may
+    be None). Same mixed-mask and loss-mask semantics — and the same
+    emit-only-when-present rule — as the packed path, so packed and
+    per-sequence execution stay numerically identical and pure-causal
+    batches skip the span-masked attention path entirely."""
     n = len(seqs)
     if spans is not None and not any(spans):
         spans = None
@@ -102,6 +102,10 @@ def padded_batch(seqs: Seq[np.ndarray], bucket: int,
     mask = np.zeros((n, bucket), np.float32)
     modality_ids = (np.full((n, bucket), -1, np.int32)
                     if spans is not None else None)
+    classes = (np.full((n, bucket), -1, np.int32)
+               if spans is not None else None)
+    loss_mask = np.zeros((n, bucket), np.float32) \
+        if spans is not None else None
     for i, s in enumerate(seqs):
         L = min(len(s), bucket)
         tokens[i, :L] = s[:L]
@@ -109,6 +113,8 @@ def padded_batch(seqs: Seq[np.ndarray], bucket: int,
         mask[i, L - 1] = 0.0   # last valid token has no next-token label
         if modality_ids is not None:
             fill_modality_row(modality_ids[i], spans[i], 0, L, 0)
+            loss_mask[i] = mask[i]
+            fill_loss_row(classes[i], loss_mask[i], spans[i], 0, L)
     labels = np.roll(tokens, -1, axis=1)
     labels[:, -1] = pad_id
     positions = np.tile(np.arange(bucket, dtype=np.int32), (n, 1))
@@ -116,6 +122,8 @@ def padded_batch(seqs: Seq[np.ndarray], bucket: int,
              "positions": positions}
     if modality_ids is not None:
         batch["modality_ids"] = modality_ids
+        batch["loss_mask"] = loss_mask
+        batch["modality_classes"] = classes
     return batch
 
 

@@ -1,0 +1,213 @@
+"""Stage-2 allocator rewrite (PR 7): the vectorized solver, the
+incremental warm-start solver and the lookahead batch API must all be
+BIT-IDENTICAL to the legacy pure-Python DP (`allocate_reference`) —
+same degrees, same makespan — and match brute force on small instances,
+across random ragged batches including span-bearing ones."""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (CostCoeffs, CostModel, DHPScheduler, Hardware,
+                        IncrementalAllocator, PlanCache, SeqInfo,
+                        allocate, allocate_bruteforce, allocate_many,
+                        allocate_reference, pack_sequences,
+                        sample_mm_batch)
+from repro.core.packing import AtomicGroup
+
+COEFFS = CostCoeffs(a1=1e-9, a2=1e-5, b1=1e-3, a3=1e-6, b2=1e-4,
+                    m_token=1.0, m_ms=0.0)
+CM = CostModel(COEFFS, Hardware(intra_bw=50, inter_bw=6, ranks_per_node=8))
+
+
+def _groups(rng, n_groups, n_ranks, *, with_spans=False):
+    """Random feasible instance: sum(d_min) <= n_ranks, random lengths,
+    etas drawn either scalar or DERIVED from synthesized span layouts."""
+    if with_spans:
+        mm = sample_mm_batch("openvid", n_groups, rng, max_tokens=4096)
+        seqs = [m.seq_info for m in mm]
+    else:
+        seqs = [SeqInfo(length=int(rng.integers(64, 4096)),
+                        eta=float(rng.choice([0.0, 0.25, 1.0])),
+                        seq_id=i)
+                for i in range(n_groups)]
+    slack = n_ranks - n_groups
+    groups = []
+    for i, s in enumerate(seqs):
+        d_min = 1 + int(rng.integers(0, slack + 1)) if slack > 0 else 1
+        slack -= d_min - 1
+        groups.append(AtomicGroup(seqs=[s], d_min=d_min,
+                                  capacity=1e12, used=0.0))
+    return groups
+
+
+def _same(a, b):
+    return a.degrees == b.degrees and a.makespan == b.makespan
+
+
+# ------------------------------------------------------- bit-equality
+@given(st.integers(0, 10 ** 6), st.integers(1, 6),
+       st.sampled_from([True, False]), st.sampled_from([True, False]))
+@settings(max_examples=40, deadline=None)
+def test_vectorized_matches_reference(seed, n_groups, uar, spans):
+    rng = np.random.default_rng(seed)
+    n_ranks = int(rng.integers(n_groups, 17))
+    groups = _groups(rng, n_groups, n_ranks, with_spans=spans)
+    ref = allocate_reference(groups, n_ranks, CM.group_time,
+                             use_all_ranks=uar)
+    vec = allocate(groups, n_ranks, CM.group_time, use_all_ranks=uar)
+    assert _same(vec, ref), (vec, ref)
+    assert vec.cost_ms >= 0 and vec.dp_ms >= 0
+
+
+@given(st.integers(0, 10 ** 6), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_vectorized_matches_bruteforce_small(seed, n_groups):
+    rng = np.random.default_rng(seed)
+    n_ranks = int(rng.integers(n_groups, 7))
+    groups = _groups(rng, n_groups, n_ranks)
+    vec = allocate(groups, n_ranks, CM.group_time)
+    bf = allocate_bruteforce(groups, n_ranks, CM.group_time)
+    assert vec.degrees == bf.degrees
+    assert vec.makespan == pytest.approx(bf.makespan)
+
+
+@given(st.integers(0, 10 ** 6), st.integers(2, 6),
+       st.sampled_from([True, False]))
+@settings(max_examples=30, deadline=None)
+def test_incremental_matches_reference_on_perturbed_stream(seed,
+                                                           n_groups, uar):
+    """A stream of suffix-perturbed instances: the warm-started solver
+    must stay bit-identical to cold reference solves at every step."""
+    rng = np.random.default_rng(seed)
+    n_ranks = int(rng.integers(n_groups, 17))
+    groups = _groups(rng, n_groups, n_ranks)
+    inc = IncrementalAllocator()
+    for _ in range(4):
+        ref = allocate_reference(groups, n_ranks, CM.group_time,
+                                 use_all_ranks=uar)
+        warm = inc(groups, n_ranks, CM.group_time, use_all_ranks=uar)
+        assert _same(warm, ref)
+        # perturb the LAST group's length (same d_min -> same totals)
+        g = groups[-1]
+        s = g.seqs[0]
+        groups = groups[:-1] + [dataclasses.replace(
+            g, seqs=[dataclasses.replace(s, length=s.length + 1)])]
+
+
+def test_incremental_reuses_prefix_rows():
+    rng = np.random.default_rng(7)
+    groups = _groups(rng, 6, 16)
+    inc = IncrementalAllocator()
+    first = inc(groups, 16, CM.group_time)
+    assert first.mode == "full" and first.rows_reused == 0
+    g = groups[-1]
+    s = g.seqs[0]
+    perturbed = groups[:-1] + [dataclasses.replace(
+        g, seqs=[dataclasses.replace(s, length=s.length + 1)])]
+    second = inc(perturbed, 16, CM.group_time)
+    assert second.mode == "incremental"
+    assert second.rows_reused == len(groups) - 1
+    # identical instance again -> full prefix reuse, still identical
+    third = inc(perturbed, 16, CM.group_time)
+    assert _same(third, second)
+
+
+def test_incremental_falls_back_on_changed_rank_total():
+    """Changing the total d_min reserve shifts EVERY row's feasible
+    window, so no prefix is reusable — must degrade to a full solve and
+    stay correct."""
+    rng = np.random.default_rng(3)
+    groups = _groups(rng, 4, 16)
+    inc = IncrementalAllocator()
+    inc(groups, 16, CM.group_time)
+    bumped = [dataclasses.replace(groups[0], d_min=groups[0].d_min + 1)
+              ] + groups[1:]
+    got = inc(bumped, 16, CM.group_time)
+    assert got.mode == "full"
+    assert _same(got, allocate_reference(bumped, 16, CM.group_time))
+
+
+def test_allocate_many_matches_individual_solves():
+    rng = np.random.default_rng(11)
+    batches = [_groups(rng, 5, 16) for _ in range(3)]
+    many = allocate_many(batches, 16, CM.group_time)
+    for b, a in zip(batches, many):
+        assert _same(a, allocate_reference(b, 16, CM.group_time))
+
+
+# ------------------------------------------------- vectorized cost rows
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_group_time_vector_bit_equal(seed):
+    rng = np.random.default_rng(seed)
+    seqs = [SeqInfo(length=int(rng.integers(64, 8192)),
+                    eta=float(rng.uniform(0, 1)), seq_id=i)
+            for i in range(int(rng.integers(1, 5)))]
+    degrees = np.arange(1, 17)
+    vec = CM.group_time_vector(seqs, degrees)
+    for d, v in zip(degrees, vec):
+        assert v == CM.group_time(seqs, int(d))     # exact, not approx
+
+
+# ----------------------------------------------------- solver timing split
+def test_solver_ms_split():
+    rng = np.random.default_rng(0)
+    groups = _groups(rng, 6, 16)
+    for fn in (allocate, allocate_reference):
+        a = fn(groups, 16, CM.group_time)
+        assert a.solver_ms > 0
+        assert a.cost_ms > 0 and a.dp_ms >= 0
+
+
+def test_scheduler_surfaces_allocate_split_and_replan_mode():
+    rng = np.random.default_rng(5)
+    mm = sample_mm_batch("openvid", 12, rng, max_tokens=2048)
+    seqs = [m.seq_info for m in mm]
+    sched = DHPScheduler(CM, 8, mem_budget=4096.0)
+    plan = sched.schedule(seqs)
+    assert plan.replan_mode == "full"
+    assert "allocate_cost" in plan.stage_ms
+    assert "allocate_dp" in plan.stage_ms
+    # identical histogram again -> every DP row warm
+    plan2 = sched.schedule(seqs)
+    assert plan2.replan_mode == "incremental"
+    assert plan2.degree_histogram == plan.degree_histogram
+
+
+def test_scheduler_incremental_equals_cold():
+    """The warm-started scheduler must emit structurally identical plans
+    to a cold scheduler at every step of a drifting stream."""
+    rng = np.random.default_rng(9)
+    sched = DHPScheduler(CM, 8, mem_budget=4096.0)
+    for _ in range(4):
+        mm = sample_mm_batch("openvid", 10, rng, max_tokens=2048)
+        seqs = [m.seq_info for m in mm]
+        warm = sched.schedule(seqs)
+        cold = DHPScheduler(CM, 8, mem_budget=4096.0,
+                            incremental=False).schedule(seqs)
+        assert warm.structural_hash() == cold.structural_hash()
+
+
+# ------------------------------------------------------- PlanCache.nearest
+def test_plan_cache_nearest_prefers_largest_overlap():
+    sched = DHPScheduler(CM, 8, mem_budget=4096.0)
+    cache = PlanCache()
+    assert cache.nearest([SeqInfo(length=256, seq_id=0)]) is None
+    a = [SeqInfo(length=256, seq_id=i) for i in range(4)]
+    b = [SeqInfo(length=1024, seq_id=i) for i in range(4)]
+    plan_a, plan_b = sched.schedule(a), sched.schedule(b)
+    cache.store(a, plan_a)
+    cache.store(b, plan_b)
+    near = [SeqInfo(length=1024, seq_id=i) for i in range(3)] + \
+        [SeqInfo(length=256, seq_id=3)]
+    stats = dict(cache.stats)
+    hit = cache.nearest(near)
+    assert hit is not None
+    assert hit.structural_hash() == plan_b.structural_hash()
+    # nearest() is a warm-start REFERENCE: no hit/miss accounting
+    assert cache.stats == stats
+    # exact key present -> that entry wins outright
+    exact = cache.nearest(b)
+    assert exact.structural_hash() == plan_b.structural_hash()

@@ -690,3 +690,145 @@ def test_sample_trace_carries_spans_and_serving_runs():
     rep = eng.serving(slots=2, prefill_chunk=16).run(trace)
     assert len(rep.requests) == len(trace)
     assert all(m.n_generated > 0 for m in rep.requests)
+
+
+# ------------------------------------------------------ loss masking (PR 7)
+def test_fill_loss_row_semantics():
+    from repro.core.packing import (MODALITY_CLASSES, fill_loss_row,
+                                    modality_class)
+    L = 8
+    cls = np.full(L, -1, np.int32)
+    lm = np.zeros(L, np.float32)
+    lm[:L - 1] = 1.0                       # base next-token mask
+    spans = (ModalitySpan("text", 0, 2),
+             ModalitySpan("vision", 2, 3, "bidirectional"),
+             ModalitySpan("text", 5, 3))
+    fill_loss_row(cls, lm, spans, 0, L)
+    # position i labels token i+1: the vision span [2, 5) owns label
+    # positions [1, 4), which are excluded from the NLL...
+    np.testing.assert_array_equal(lm, [1, 0, 0, 0, 1, 1, 1, 0])
+    # ...but still classified for telemetry; everything else is text
+    v = modality_class("vision")
+    np.testing.assert_array_equal(cls, [0, v, v, v, 0, 0, 0, -1])
+    assert MODALITY_CLASSES[v] == "vision"
+    # unknown modalities fold into "other", never crash
+    assert MODALITY_CLASSES[modality_class("thermal")] == "other"
+
+
+def test_flatten_group_and_padded_batch_loss_mask_agree():
+    from repro.data.pipeline import padded_batch
+    seqs = [np.arange(6, dtype=np.int32),
+            np.arange(5, dtype=np.int32) + 50]
+    spans = [
+        (ModalitySpan("text", 0, 2),
+         ModalitySpan("vision", 2, 3, "bidirectional"),
+         ModalitySpan("text", 5, 1)),
+        (ModalitySpan("audio", 0, 4, "bidirectional"),
+         ModalitySpan("text", 4, 1)),
+    ]
+    flat, cu = flatten_group(seqs, bucket=16, spans=spans)
+    pad = padded_batch(seqs, bucket=8, spans=spans)
+    for batch in (flat, pad):
+        assert batch["loss_mask"].shape == batch["mask"].shape
+        # loss_mask only ever REMOVES label positions
+        assert ((batch["mask"] - batch["loss_mask"]) >= 0).all()
+        # a class everywhere a label exists, -1 where none
+        assert ((batch["modality_classes"] >= 0)
+                == (batch["mask"] > 0)).all()
+    # same per-sequence semantics on both layouts
+    for i in range(len(seqs)):
+        a, b = int(cu[i]), int(cu[i + 1])
+        L = b - a
+        np.testing.assert_array_equal(flat["loss_mask"][0, a:b],
+                                      pad["loss_mask"][i, :L])
+        np.testing.assert_array_equal(flat["modality_classes"][0, a:b],
+                                      pad["modality_classes"][i, :L])
+    # bidirectional audio prefix of seq 1: labels [0, 3) masked out
+    np.testing.assert_array_equal(pad["loss_mask"][1, :5],
+                                  [0, 0, 0, 1, 0])
+    # span-less call emits NEITHER table (pre-span dict preserved)
+    assert "loss_mask" not in padded_batch(seqs, bucket=8)
+
+
+def test_engine_reports_modality_loss_and_replan_telemetry(subproc):
+    """Engine-level PR-7 telemetry on 8 devices: per-modality NLL from
+    the loss-masked executor, Stage-2 allocate_us, replan_mode, and the
+    depth-k batched lookahead window."""
+    subproc("""
+from repro.api import ClusterSpec, Engine, get_strategy
+from repro.core.packing import MODALITY_CLASSES
+from repro.data.pipeline import HeterogeneousLoader
+
+loader = HeterogeneousLoader("openvid", 6, 512, seed=3, max_tokens=256,
+                             tokens_per_frame=16)
+data = next(iter(loader))
+
+# plan_cache OFF + a REPEATED batch: step 1 solves cold ("full"),
+# steps 2-3 re-solve the identical instance off the warm DP state
+eng = Engine("internvl3-2b", ClusterSpec.auto(mem_budget=900.0),
+             reduced=True, seed=0,
+             strategy=get_strategy("dhp", plan_cache=False))
+hist = eng.train(loader=iter([data, data, data]), steps=3, lookahead=2)
+m0 = hist[0]
+# span-bearing openvid batches report per-modality NLL; bidirectional
+# vision labels are excluded from the TRAINING loss but still reported
+assert set(m0.modality_loss) <= set(MODALITY_CLASSES)
+assert "text" in m0.modality_loss and "vision" in m0.modality_loss
+assert all(v > 0 for v in m0.modality_loss.values())
+assert m0.allocate_us > 0
+assert m0.replan_mode == "full"
+assert all(m.replan_mode == "incremental" for m in hist[1:]), \
+    [m.replan_mode for m in hist]
+eng.close()
+
+# plan_cache ON: the repeated shape is served from the PlanCache
+eng2 = Engine("internvl3-2b", ClusterSpec.auto(mem_budget=900.0),
+              reduced=True, seed=0,
+              strategy=get_strategy("dhp", plan_cache=True))
+hist2 = eng2.train(loader=iter([data, data]), steps=2, lookahead=False)
+assert hist2[1].plan_cache_hit and hist2[1].replan_mode == "cache"
+eng2.close()
+print("telemetry ok", m0.modality_loss, [m.replan_mode for m in hist])
+""", n_devices=8)
+
+
+def test_strategy_prepare_many_window_matches_cold_plans():
+    from repro.api import get_strategy
+    batches = [[m.seq_info for m in _mm_batch(seed, n=8)]
+               for seed in (1, 2, 3)]
+    strat = get_strategy("dhp", plan_cache=False).bind(CM, 8, 3000.0)
+    strat.prepare_many(batches)
+    assert strat.n_pending == 3
+    window = [strat.collect() for _ in range(3)]
+    strat.close()
+    for infos, plan in zip(batches, window):
+        cold = get_strategy("dhp", plan_cache=False).bind(
+            CM, 8, 3000.0).plan(infos)
+        assert plan.structural_hash() == cold.structural_hash()
+
+
+def test_new_dataset_profiles_span_layouts():
+    """PR-7 profiles: image-QA is a single bidirectional vision prefix
+    (n_images x 576 patch tokens) + causal QA text; long-form audio is
+    one bidirectional audio window + causal transcript — and both feed
+    the planner the derived (not hand-set) eta."""
+    rng = np.random.default_rng(0)
+    qa = sample_mm_batch("imageqa", 32, rng)
+    for m in qa:
+        bidi = [sp for sp in m.spans if sp.attn == "bidirectional"]
+        assert len(bidi) == 1 and bidi[0].modality == "vision"
+        assert bidi[0].start == 0 and bidi[0].length % 576 == 0
+        assert 1 <= bidi[0].length // 576 <= 4
+        assert m.spans[-1].attn == "causal"          # QA text tail
+        assert m.eta == pytest.approx(spans_eta(m.spans))
+    au = sample_mm_batch("longaudio", 32, rng)
+    lens = sorted(m.length for m in au)
+    for m in au:
+        bidi = [sp for sp in m.spans if sp.attn == "bidirectional"]
+        assert len(bidi) == 1 and bidi[0].modality == "audio"
+        assert bidi[0].start == 0
+    # 30 s .. 15 min at 25 tok/s + 400 transcript tokens
+    assert lens[0] >= 30 * 25 + 400
+    assert lens[-1] <= 900 * 25 + 400
+    # the long tail the profile exists for: >4x spread in one batch
+    assert lens[-1] / lens[0] > 4

@@ -51,7 +51,8 @@ def _validate_plan_constraints(plan, seqs, n_ranks, budget):
     assert seen == all_ids
 
 
-@pytest.mark.parametrize("dataset", ["msrvtt", "internvid", "openvid"])
+@pytest.mark.parametrize("dataset", ["msrvtt", "internvid", "openvid",
+                                     "imageqa", "longaudio"])
 @pytest.mark.parametrize("n_ranks", [7, 8, 24, 64])
 def test_plan_satisfies_paper_constraints(dataset, n_ranks):
     seqs = sample_batch(dataset, 64, np.random.default_rng(3),
