@@ -21,6 +21,12 @@ Two further gates (PR 7, millisecond-class planning):
     speedup >= 1 / `--lookahead-tolerance`. The default tolerance
     absorbs the ~5% run-to-run noise of host-device step timing.
 
+One gate from PR 9 (observability):
+
+  * `trace/overhead` (traced / untraced median per-plan wall, see
+    bench_end_to_end.run_trace_overhead) — a live Tracer must cost the
+    planner at most `--trace-tolerance` (default 1.05 = <=5%).
+
   PYTHONPATH=src python -m benchmarks.check_regression --new BENCH_pr3.json
 """
 from __future__ import annotations
@@ -79,6 +85,9 @@ def main() -> int:
     ap.add_argument("--lookahead-tolerance", type=float, default=1.05,
                     help="pipelined step wall may exceed sync by at "
                          "most this factor")
+    ap.add_argument("--trace-tolerance", type=float, default=1.05,
+                    help="max traced/untraced planning-time ratio "
+                         "(the tracing-overhead budget)")
     args = ap.parse_args()
 
     new_abs = os.path.abspath(args.new)
@@ -160,6 +169,15 @@ def main() -> int:
         if speedup < floor:
             print("FAIL: pipelined lookahead lost to synchronous "
                   "planning beyond tolerance")
+            failed = True
+
+    # ---- tracing-overhead gate (trace/overhead) ----------------------
+    trace_overhead = named_value(new_rows, "trace/overhead")
+    if trace_overhead is not None:
+        print(f"trace/overhead: {trace_overhead:.3f} "
+              f"(budget {args.trace_tolerance})")
+        if trace_overhead > args.trace_tolerance:
+            print("FAIL: tracing overhead over budget")
             failed = True
 
     if failed:

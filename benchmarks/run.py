@@ -70,7 +70,15 @@ def main() -> None:
                     help="also write every row to PATH as JSON — the CI "
                          "artifact that tracks padding_efficiency / "
                          "exe_misses across PRs")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="save the traced smoke-train's Chrome "
+                         "trace-event JSON (plus PATH.report.json run "
+                         "report) — the CI observability artifact")
     args = ap.parse_args()
+
+    if args.trace:
+        from . import bench_end_to_end
+        bench_end_to_end.TRACE_OUT = args.trace
 
     print("name,us_per_call,derived")
     failed = []

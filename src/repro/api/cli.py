@@ -60,6 +60,17 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--no-lookahead", action="store_true",
                     help="disable the planner pipeline: plan each "
                     "batch synchronously before executing it")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON timeline of "
+                    "the run to PATH (open at https://ui.perfetto.dev); "
+                    "switches execution to measuring mode")
+    ap.add_argument("--report", metavar="PATH", default=None,
+                    help="write the post-run analytics report "
+                    "(imbalance, stragglers, cost-model MAPE) to PATH "
+                    "as JSON; implies measuring mode")
+    ap.add_argument("--metrics", metavar="PATH", default=None,
+                    help="write per-step StepMetrics history to PATH "
+                    "as JSON")
     return ap
 
 
@@ -98,11 +109,14 @@ def run(args, default_strategy: str = "dhp") -> List[StepMetrics]:
               f"{args.replay_plans}")
     plan_log: Optional[list] = (
         [] if getattr(args, "save_plans", None) else None)
+    trace = getattr(args, "trace", None)
+    report = getattr(args, "report", None)
     history = engine.train(
         steps=steps, dataset=args.dataset,
         global_batch=args.batch, max_tokens=args.seq_len,
         lookahead=not getattr(args, "no_lookahead", False),
-        plan_log=plan_log, log=print)
+        plan_log=plan_log, log=print,
+        trace=trace, report=report or bool(trace))
     print("executable pool:", engine.executor.pool.stats)
     cache = engine.strategy.plan_cache
     if cache is not None:
@@ -110,6 +124,20 @@ def run(args, default_strategy: str = "dhp") -> List[StepMetrics]:
     if plan_log is not None:
         save_plans(args.save_plans, plan_log)
         print(f"saved {len(plan_log)} plans -> {args.save_plans}")
+    if trace:
+        print(f"saved trace -> {trace}")
+    if engine.last_report is not None:
+        print(engine.last_report.summary())
+        if report:
+            print(f"saved report -> {report}")
+    metrics_path = getattr(args, "metrics", None)
+    if metrics_path:
+        import json
+
+        from .engine import metrics_to_json
+        with open(metrics_path, "w") as f:
+            json.dump(metrics_to_json(history), f, indent=1)
+        print(f"saved metrics -> {metrics_path}")
     if args.checkpoint:
         engine.save_checkpoint(args.checkpoint)
         print("saved", args.checkpoint)
@@ -160,6 +188,10 @@ def build_serve_parser() -> argparse.ArgumentParser:
                     help="prefill grouping strategy (registry name)")
     ap.add_argument("--checkpoint", default=None,
                     help="load params from a checkpoint before serving")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace-event JSON timeline of "
+                    "the serving loop (prefill/decode spans, KV and "
+                    "queue counter tracks) to PATH")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -186,8 +218,10 @@ def serve_main(argv: Optional[List[str]] = None) -> None:
     print(f"arch={engine.cfg.arch_id} family={engine.cfg.family} "
           f"slots={srv.n_slots} requests={len(trace)} "
           f"dataset={args.dataset}")
-    report = srv.run(trace, log=print)
+    report = srv.run(trace, log=print, trace=args.trace)
     print(report.summary())
+    if args.trace:
+        print(f"saved trace -> {args.trace}")
     print(f"kv: peak_blocks={report.peak_kv_blocks} "
           f"occupancy_max={max(report.kv_occupancy):.2f} "
           f"cache_len={report.cache_len}")

@@ -27,6 +27,8 @@ from ..core.cost_model import CostModel, SeqInfo, analytic_coeffs
 from ..core.executor import DHPExecutor
 from ..core.scheduler import ExecutionPlan, diff_plans
 from ..data.pipeline import HeterogeneousLoader, RaggedBatch
+from ..obs import (MetricsRegistry, RunRecorder, RunReport, Tracer,
+                   build_report, step_model_error, tracing)
 from .cluster import ClusterSpec
 from .strategies import Strategy, get_strategy
 
@@ -75,6 +77,13 @@ class StepMetrics:
     #: still report their NLL here for monitoring.
     modality_loss: Dict[str, float] = dataclasses.field(
         default_factory=dict)
+    #: cost-model MAPE of this step's scaled predicted vs measured
+    #: group times (obs.report.step_model_error); 0.0 on unmeasured
+    #: steps and steps where every group paid XLA compilation
+    model_error_pct: float = 0.0
+    #: the strategy's PlanCache.stats snapshot after this step (hits,
+    #: misses, size, nearest_* reference counters); {} when caching off
+    plan_cache: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
         cached = " cached" if self.plan_cache_hit else ""
@@ -83,6 +92,36 @@ class StepMetrics:
                 f"sched={self.schedule_ms:.1f}ms{cached} "
                 f"reconf={self.groups_reconfigured} "
                 f"({self.step_time_s:.2f}s)")
+
+    # -- serialization: THE StepMetrics wire format ---------------------
+    def to_json(self) -> dict:
+        """JSON-serializable dict; `from_json` round-trips it exactly.
+        Every consumer (Engine history dumps, benchmarks, the obs run
+        report) uses this instead of ad-hoc field plucking."""
+        d = dataclasses.asdict(self)
+        # JSON object keys are strings; stringify the int degree keys
+        d["degree_histogram"] = {str(k): v for k, v
+                                 in self.degree_histogram.items()}
+        return d
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "StepMetrics":
+        names = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in obj.items() if k in names}
+        kw["degree_histogram"] = {
+            int(k): int(v)
+            for k, v in (kw.get("degree_histogram") or {}).items()}
+        return cls(**kw)
+
+
+def metrics_to_json(history: List["StepMetrics"]) -> dict:
+    """A training history as one JSON document (the --metrics file)."""
+    return {"version": 1, "steps": [m.to_json() for m in history]}
+
+
+def metrics_from_json(obj: dict) -> List["StepMetrics"]:
+    steps = obj["steps"] if isinstance(obj, dict) else obj
+    return [StepMetrics.from_json(s) for s in steps]
 
 
 def demo_cost_model(cfg: ModelConfig) -> CostModel:
@@ -142,6 +181,14 @@ class Engine:
         self._apply_update = None
         self._step = 0
         self._prev_plan: Optional[ExecutionPlan] = None
+        #: session-lifetime counters/gauges/histograms (obs.metrics);
+        #: updated by every execute(), snapshot() at any point
+        self.metrics = MetricsRegistry()
+        #: per-group (predicted, measured, rank-slot) records feeding
+        #: the run report; installed by train(trace=/report=)
+        self._recorder: Optional[RunRecorder] = None
+        #: the RunReport of the last traced/reported train() call
+        self.last_report: Optional[RunReport] = None
         #: the loader train() last built/used — checkpointed so resume
         #: replays the exact remaining batch stream
         self.loader = None
@@ -197,7 +244,10 @@ class Engine:
         import jax
 
         if measure is None:
-            measure = self.strategy.wants_measurement
+            # an installed recorder needs per-group timings too (the
+            # run report's imbalance/straggler/MAPE inputs)
+            measure = (self.strategy.wants_measurement
+                       or self._recorder is not None)
         # Group-reconfiguration delta vs the previously executed plan:
         # the pool consumes it (reused slots cost nothing, new/resized
         # slots are created) instead of re-deriving every group.
@@ -223,8 +273,12 @@ class Engine:
                 self._apply_update = apply_update
             self.state = self._apply_update(self.state, grads)
         step_time = time.perf_counter() - t0
+        model_error = 0.0
         if timings:
             self.strategy.observe(plan, timings)
+            model_error = step_model_error(plan, timings)
+            if self._recorder is not None:
+                self._recorder.record_step(self._step, plan, timings)
         mod_tokens: Dict[str, int] = {}
         for s in data.infos:
             spans = getattr(s, "spans", None)
@@ -255,9 +309,35 @@ class Engine:
             replan_mode=plan.replan_mode,
             modality_loss=dict(self.executor.last_run_stats.get(
                 "modality_loss", {})),
+            model_error_pct=model_error,
+            plan_cache=(dict(self.strategy.plan_cache.stats)
+                        if self.strategy.plan_cache is not None else {}),
         )
         self._step += 1
+        self._update_metrics(metrics, measured=bool(timings))
         return metrics
+
+    def _update_metrics(self, m: StepMetrics, *, measured: bool) -> None:
+        """Fold one step's signals into the session metrics registry."""
+        reg = self.metrics
+        reg.counter("train/steps").inc()
+        reg.counter("train/tokens").inc(m.tokens)
+        reg.counter("pool/exe_misses").inc(m.exe_misses)
+        reg.counter("pool/groups_reconfigured").inc(
+            m.groups_reconfigured)
+        reg.counter("plan/steps_from_cache").inc(int(m.plan_cache_hit))
+        reg.histogram("plan/schedule_ms").observe(m.schedule_ms)
+        reg.histogram("plan/allocate_us").observe(m.allocate_us)
+        reg.histogram("exec/step_time_s").observe(m.step_time_s)
+        reg.histogram("exec/padding_efficiency").observe(
+            m.padding_efficiency)
+        if measured:
+            reg.histogram("cost_model/error_pct").observe(
+                m.model_error_pct)
+        # cumulative cache/pool state lands as gauges under distinct
+        # prefixes so they cannot collide with the per-step counters
+        reg.update_from(m.plan_cache, "plan/cache_")
+        reg.update_from(vars(self.executor.pool.stats), "pool/total_")
 
     # -- train: THE loop ------------------------------------------------
     def train(self, loader: Optional[Iterable[RaggedBatch]] = None, *,
@@ -266,7 +346,10 @@ class Engine:
               tokens_per_frame: int = 16,
               lookahead: Union[bool, int] = True,
               plan_log: Optional[List[ExecutionPlan]] = None,
-              log=None) -> List[StepMetrics]:
+              log=None,
+              trace: Union[None, bool, str, Tracer] = None,
+              report: Union[None, bool, str] = None
+              ) -> List[StepMetrics]:
         """The single training driver: heterogeneous batches -> strategy
         plan -> executor. Every strategy (static baselines included)
         runs through this one loop.
@@ -282,7 +365,58 @@ class Engine:
         plan, then execute, back to back.
 
         `plan_log`: pass a list to receive every executed ExecutionPlan
-        (the `--save-plans` trace)."""
+        (the `--save-plans` trace).
+
+        `trace`: a path (Chrome trace-event JSON is saved there), True,
+        or a Tracer instance — records the run's timeline: scheduler
+        stages and the lookahead planner thread on host tracks, measured
+        group execution on one track per simulated rank (load the file
+        at https://ui.perfetto.dev). `report`: a path or True — builds
+        the post-run analytics RunReport (per-wave imbalance, per-rank
+        straggler scores, cost-model MAPE), kept on `self.last_report`
+        and saved as JSON when a path is given. Either option switches
+        execution to measuring mode (per-group synchronous timing), so
+        the concurrent dispatch of disjoint groups is traded for
+        observability — see docs/api.md "Observability"."""
+        tracer: Optional[Tracer] = None
+        trace_path: Optional[str] = None
+        if trace is not None and trace is not False:
+            if isinstance(trace, str):
+                trace_path, tracer = trace, Tracer()
+            elif trace is True:
+                tracer = Tracer()
+            else:
+                tracer = trace
+        observing = tracer is not None or bool(report)
+        if observing:
+            self._recorder = RunRecorder(self.cluster.n_replicas)
+        history: List[StepMetrics] = []
+        try:
+            if tracer is not None:
+                with tracing(tracer):
+                    self._train_loop(loader, steps, dataset,
+                                     global_batch, max_tokens,
+                                     tokens_per_frame, lookahead,
+                                     plan_log, log, history)
+            else:
+                self._train_loop(loader, steps, dataset, global_batch,
+                                 max_tokens, tokens_per_frame,
+                                 lookahead, plan_log, log, history)
+        finally:
+            if observing:
+                self.last_report = build_report(
+                    self._recorder, history,
+                    metrics=self.metrics.snapshot())
+                self._recorder = None
+                if isinstance(report, str):
+                    self.last_report.save(report)
+            if trace_path is not None:
+                tracer.save(trace_path)
+        return history
+
+    def _train_loop(self, loader, steps, dataset, global_batch,
+                    max_tokens, tokens_per_frame, lookahead, plan_log,
+                    log, history: List[StepMetrics]) -> None:
         if loader is None:
             loader = HeterogeneousLoader(
                 dataset, global_batch, self.cfg.vocab, seed=self.seed,
@@ -301,13 +435,12 @@ class Engine:
         try:
             data = next(it)
         except StopIteration:
-            return []
+            return
         n_fetched = 1
         if depth:
             self.strategy.prepare(data.infos)
         from collections import deque
         queue: "deque[RaggedBatch]" = deque()   # fetched, plan in flight
-        history: List[StepMetrics] = []
         for i in range(steps):
             if depth:
                 plan = self.strategy.collect()
@@ -339,7 +472,6 @@ class Engine:
             if not queue:
                 break
             data = queue.popleft()
-        return history
 
     # -- serve ----------------------------------------------------------
     def serve(self, prompts=None, *, batch: int = 8,

@@ -31,6 +31,7 @@ from ..core.cost_model import CostModel, SeqInfo, as_seq_infos
 from ..core.group_pool import pow2_bucket
 from ..core.scheduler import (DHPScheduler, ExecutionPlan, PlanCache,
                               static_plan)
+from ..obs.trace import get_tracer
 
 # name -> (class, constructor defaults). Aliases ("megatron") are just
 # extra entries with different defaults.
@@ -178,6 +179,16 @@ class Strategy:
                      if getattr(s, "spans", None)}
             plan.seq_spans = spans or None
         plan.strategy_name = self.name
+        tr = get_tracer()
+        if tr.enabled:
+            # emitted from whichever thread ran the solve — the
+            # lookahead planner thread gets its own trace track
+            tr.complete("plan", t0, time.perf_counter() - t0, "planner",
+                        args={"strategy": self.name,
+                              "seqs": len(seqs),
+                              "cache_hit": plan.from_cache,
+                              "replan_mode": plan.replan_mode,
+                              "schedule_ms": plan.schedule_ms})
         return plan
 
     def _plan(self, seqs: List[SeqInfo]) -> ExecutionPlan:

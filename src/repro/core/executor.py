@@ -58,6 +58,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..data.pipeline import RaggedBatch, padded_batch
 from ..models.model import forward
+from ..obs.trace import get_tracer
 from ..parallel.compat import shard_map
 from ..training.optimizer import AdamW
 from .group_pool import GroupPool
@@ -256,6 +257,8 @@ class DHPExecutor:
         had at least one valid label (classes masked OUT of the
         training loss, e.g. bidirectional vision spans, still report)."""
         import time as _time
+        tr = get_tracer()
+        t_run = _time.perf_counter()
         total_tokens = 0.0
         g_acc = None
         loss_acc = 0.0
@@ -273,7 +276,7 @@ class DHPExecutor:
         for mb in plan.micro_batches:
             handles = []
             for g in mb.groups:
-                _, _, start, _ = next(slots)
+                mi, gi, start, _ = next(slots)
                 seqs = [data.by_id(i) for i in g.seq_ids]
                 spans = ([spans_by_id.get(i) for i in g.seq_ids]
                          if spans_by_id else None)
@@ -298,22 +301,45 @@ class DHPExecutor:
                 agg["exe_misses"] += int(compiled)
                 agg["groups"] += 1
                 if timings is None:
+                    t0 = _time.perf_counter()
                     handles.append((step(params, batch), n_tok))  # async
+                    if tr.enabled:
+                        # host-side dispatch cost only: the device work
+                        # runs asynchronously and is not observable
+                        # per group on this path
+                        tr.complete("dispatch", t0,
+                                    _time.perf_counter() - t0, "exec",
+                                    args={"mb": mi, "group": gi,
+                                          "degree": g.degree,
+                                          "start_rank": start})
                 else:
                     t0 = _time.perf_counter()
                     out = jax.block_until_ready(step(params, batch))
+                    dt = _time.perf_counter() - t0
                     timings.append({
                         "seq_ids": list(g.seq_ids),
                         "degree": g.degree,
                         "tokens": g.tokens,
                         "bucket": bucket,
-                        "seconds": _time.perf_counter() - t0,
+                        "seconds": dt,
                         "compiled": compiled,
                         "real_tokens": real,
                         "padded_tokens": padded,
                         "padding_efficiency": real / max(padded, 1),
                     })
+                    if tr.enabled:
+                        # measured group time becomes ONE span on the
+                        # track of every rank the group occupies — the
+                        # per-rank timeline the straggler analytics read
+                        for rank in range(start, start + g.degree):
+                            tr.rank_span(
+                                "execute", rank, t0, dt,
+                                args={"mb": mi, "group": gi,
+                                      "degree": g.degree,
+                                      "tokens": g.tokens,
+                                      "compiled": compiled})
                     handles.append((out, n_tok))
+            t_collect = _time.perf_counter()
             for out, n_tok in handles:
                 loss, grads = out[0], out[1]
                 if len(out) > 2:           # span-bearing: modality aux
@@ -326,6 +352,12 @@ class DHPExecutor:
                     lambda a: np.asarray(a, np.float32) * w, grads)
                 g_acc = g_np if g_acc is None else jax.tree.map(
                     np.add, g_acc, g_np)
+            if tr.enabled:
+                # draining the handles forces the device sync for this
+                # micro-batch — the wave barrier
+                tr.complete("collect", t_collect,
+                            _time.perf_counter() - t_collect, "exec",
+                            args={"groups": len(handles)})
         agg["padding_efficiency"] = (
             agg["real_tokens"] / max(agg["padded_tokens"], 1))
         if aux_acc is not None:
@@ -336,4 +368,10 @@ class DHPExecutor:
         self.last_run_stats = agg
         denom = max(total_tokens, 1.0)
         grads = jax.tree.map(lambda a: jnp.asarray(a / denom), g_acc)
+        if tr.enabled:
+            tr.complete("run_plan", t_run,
+                        _time.perf_counter() - t_run, "exec",
+                        args={"groups": agg["groups"],
+                              "exe_misses": agg["exe_misses"],
+                              "measured": timings is not None})
         return jnp.asarray(loss_acc / denom), grads

@@ -31,6 +31,8 @@ from typing import Any, Callable, Dict, Hashable, Optional, Tuple, Union
 
 import numpy as np
 
+from ..obs.trace import get_tracer
+
 
 def pow2_bucket(n: int, minimum: int = 128) -> int:
     """Smallest power-of-two >= n (>= minimum) — the padding bucket."""
@@ -148,7 +150,12 @@ class GroupPool:
             self._exes.move_to_end(key)
             return self._exes[key], False
         self.stats.exe_misses += 1
-        exe = build()
+        # span name is "exe_build", not "compile": jit() is lazy, XLA
+        # compilation itself lands in the first execution (the timing
+        # record's `compiled` flag / rank-span arg carries that)
+        with get_tracer().span("exe_build", "pool",
+                               args={"key": repr(key)}):
+            exe = build()
         self._exes[key] = exe
         if (self.max_executables is not None
                 and len(self._exes) > self.max_executables):

@@ -23,6 +23,7 @@ from collections import OrderedDict
 from typing import (Any, Callable, Dict, List, Optional, Sequence as Seq,
                     Tuple)
 
+from ..obs.trace import get_tracer
 from .allocator import Allocation, IncrementalAllocator, allocate
 from .cost_model import CostModel, ModalitySpan, SeqInfo
 from .packing import AtomicGroup, pack_sequences
@@ -403,6 +404,11 @@ class PlanCache:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        # nearest() warm-reference accounting (separate from hit/miss:
+        # a reference is never served as a plan)
+        self.nearest_exact = 0
+        self.nearest_fallback = 0
+        self.nearest_none = 0
 
     # ------------------------------------------------------------------
     def _span_sig(self, s: SeqInfo) -> Any:
@@ -501,13 +507,18 @@ class PlanCache:
         items. Unlike `lookup` this neither remaps seq_ids nor
         validates — the result is a warm REFERENCE for incremental
         replanning (which groups/degrees a near-identical batch used),
-        not an executable plan. Does not count as a hit or miss."""
+        not an executable plan. Accounted separately from hit/miss
+        (`nearest_exact` / `nearest_fallback` / `nearest_none` in
+        `stats`): a reference is never served as a plan, so it must not
+        distort the cache's hit rate."""
         k = self.key(seqs)
         with self._lock:
             entry = self._entries.get(k)
             if entry is not None:
+                self.nearest_exact += 1
                 return entry[0]
             if not self._entries:
+                self.nearest_none += 1
                 return None
             want = dict(k[1])
             best, score = None, -1
@@ -515,6 +526,7 @@ class PlanCache:
                 ov = sum(min(c, want.get(kk, 0)) for kk, c in items)
                 if ov > score:
                     best, score = plan, ov
+            self.nearest_fallback += 1
             return best
 
     def store(self, seqs: Seq[SeqInfo], plan: ExecutionPlan) -> None:
@@ -534,7 +546,10 @@ class PlanCache:
     @property
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "size": len(self._entries)}
+                "size": len(self._entries),
+                "nearest_exact": self.nearest_exact,
+                "nearest_fallback": self.nearest_fallback,
+                "nearest_none": self.nearest_none}
 
 
 class MicroBatchPlanner:
@@ -640,11 +655,16 @@ class DHPScheduler:
 
     # -- synchronous API ----------------------------------------------------
     def schedule(self, seqs: Seq[SeqInfo]) -> ExecutionPlan:
+        tr = get_tracer()
         t0 = time.perf_counter()
         micro_plans: List[MicroBatchPlan] = []
         solver_ms = 0.0
         micro_batches = self.planner.plan(seqs)
         t_micro = time.perf_counter()
+        if tr.enabled:
+            tr.complete("microbatch", t0, t_micro - t0, "sched",
+                        args={"seqs": len(seqs),
+                              "micro_batches": len(micro_batches)})
         stage_ms = {"microbatch": (t_micro - t0) * 1e3,
                     "pack": 0.0, "allocate": 0.0,
                     # the allocate split: cost-table build (time_fn
@@ -658,7 +678,12 @@ class DHPScheduler:
                 mb, self.cm, self.budget, max_degree=self.n_ranks,
                 balance_over=self.n_ranks if self.balance_packing
                 else None)
-            stage_ms["pack"] += (time.perf_counter() - t_pack) * 1e3
+            t_packed = time.perf_counter()
+            stage_ms["pack"] += (t_packed - t_pack) * 1e3
+            if tr.enabled:
+                tr.complete("pack", t_pack, t_packed - t_pack, "sched",
+                            args={"seqs": len(mb),
+                                  "groups": len(all_groups)})
             # BFD fragmentation can leave sum(d_min) > N for one wave;
             # partition atomic groups into sequential feasible waves.
             for groups in _feasible_waves(all_groups, self.n_ranks):
@@ -680,6 +705,20 @@ class DHPScheduler:
                 stage_ms["allocate_cost"] += alloc.cost_ms
                 stage_ms["allocate_dp"] += alloc.dp_ms
                 solver_ms += alloc.solver_ms
+                if tr.enabled:
+                    # the allocate split, laid out consecutively from
+                    # t_alloc using the allocator's own sub-timers
+                    tr.complete("allocate_cost", t_alloc,
+                                alloc.cost_ms / 1e3, "sched",
+                                args={"wave": wave_idx - 1,
+                                      "groups": len(groups)})
+                    tr.complete("allocate_dp",
+                                t_alloc + alloc.cost_ms / 1e3,
+                                alloc.dp_ms / 1e3, "sched",
+                                args={"wave": wave_idx - 1,
+                                      "mode": alloc.mode,
+                                      "rows_reused": alloc.rows_reused,
+                                      "makespan_s": alloc.makespan})
                 # BEYOND-PAPER: serial fallback. The DP runs the wave's
                 # groups CONCURRENTLY on disjoint rank sets (Eq. 2-6);
                 # when per-group imbalance exceeds the ring-comm cost of

@@ -1,0 +1,21 @@
+"""repro.obs — tracing, metrics and post-run analytics.
+
+Stdlib-only and imported BY repro.core/api/serving (never the other way
+around), so any layer can instrument itself without import cycles. See
+docs/api.md "Observability".
+"""
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .report import (GroupRecord, RunRecorder, RunReport, build_report,
+                     scale_fit, scale_fit_mape, step_model_error,
+                     straggler_scores, wave_stats)
+from .trace import (NULL_TRACER, NullTracer, Tracer, get_tracer,
+                    set_tracer, tracing, validate_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "GroupRecord", "RunRecorder", "RunReport", "build_report",
+    "scale_fit", "scale_fit_mape", "step_model_error",
+    "straggler_scores", "wave_stats",
+    "NULL_TRACER", "NullTracer", "Tracer", "get_tracer", "set_tracer",
+    "tracing", "validate_trace",
+]

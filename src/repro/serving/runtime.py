@@ -25,6 +25,8 @@ from typing import Any, Dict, List, Optional, Sequence as Seq
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import Tracer, get_tracer, tracing
 from .kv_cache import KVCacheManager
 from .scheduler import (DECODE, ContinuousBatchingScheduler, PrefillGroup,
                         ServeRequest)
@@ -120,6 +122,10 @@ class ServingEngine:
         cache = self.planner.plan_cache
         if cache is not None:
             cache.salt = "serve-prefill"
+        #: run-over-run counters/gauges/histograms (queue depth, KV
+        #: occupancy, decode/prefill volume) — see docs/api.md
+        #: "Observability". Folded in by _report at the end of run().
+        self.metrics = MetricsRegistry()
 
     # -- pooled executables ---------------------------------------------
     def _exe(self, key, build):
@@ -204,6 +210,7 @@ class ServingEngine:
                            pending_first, T: int) -> int:
         """Execute one planner group; returns chunk count executed."""
         import jax.numpy as jnp
+        tr = get_tracer()
         one_shot, chunked = [], []
         for c in group.chunks:
             st = sched.states[c.request_id]
@@ -230,8 +237,11 @@ class ServingEngine:
             for r, c in enumerate(one_shot):
                 toks[r, :c.length] = \
                     sched.states[c.request_id].request.tokens[:c.length]
-            _, cache = self._group_prefill(rows, Sb, T)(
-                self.params, jnp.asarray(toks))
+            with tr.span("prefill_batch", "serve",
+                         args={"rows": rows, "bucket": Sb,
+                               "prompts": len(one_shot)}):
+                _, cache = self._group_prefill(rows, Sb, T)(
+                    self.params, jnp.asarray(toks))
             for r, c in enumerate(one_shot):
                 row = {
                     "k": cache["k"][:, r:r + 1],
@@ -255,8 +265,11 @@ class ServingEngine:
                          if self.cfg.sliding_window is not None else T)
                 L = st.request.prompt_len
                 toks = st.request.tokens[None, :]
-                logits, cache = self._group_prefill(1, L, Tring)(
-                    self.params, jnp.asarray(toks))
+                with tr.span("prefill_exact", "serve",
+                             args={"request": c.request_id,
+                                   "length": L}):
+                    logits, cache = self._group_prefill(1, L, Tring)(
+                        self.params, jnp.asarray(toks))
                 pending_first[c.request_id] = int(
                     np.argmax(np.asarray(logits)[0, 0]))
                 staging[c.request_id] = {
@@ -270,18 +283,22 @@ class ServingEngine:
             toks = np.zeros((1, Cb), np.int32)
             toks[0, :c.length] = \
                 st.request.tokens[c.start:c.start + c.length]
-            if st.request.spans is not None:
-                row = self._span_row(st.request, T)
-                cs = np.full((1, Cb), -1, np.int32)
-                cs[0, :c.length] = row[0, c.start:c.start + c.length]
-                cache = self._chunk_prefill(Cb, T, with_spans=True)(
-                    self.params, staging[c.request_id],
-                    jnp.asarray(toks), c.start, jnp.asarray(cs),
-                    jnp.asarray(row))
-            else:
-                cache = self._chunk_prefill(Cb, T)(
-                    self.params, staging[c.request_id],
-                    jnp.asarray(toks), c.start)
+            with tr.span("prefill_chunk", "serve",
+                         args={"request": c.request_id,
+                               "start": c.start, "length": c.length,
+                               "bucket": Cb}):
+                if st.request.spans is not None:
+                    row = self._span_row(st.request, T)
+                    cs = np.full((1, Cb), -1, np.int32)
+                    cs[0, :c.length] = row[0, c.start:c.start + c.length]
+                    cache = self._chunk_prefill(Cb, T, with_spans=True)(
+                        self.params, staging[c.request_id],
+                        jnp.asarray(toks), c.start, jnp.asarray(cs),
+                        jnp.asarray(row))
+                else:
+                    cache = self._chunk_prefill(Cb, T)(
+                        self.params, staging[c.request_id],
+                        jnp.asarray(toks), c.start)
             # pos is owned by the bookkeeping here, not the padded chunk
             cache = {**cache,
                      "pos": jnp.asarray(c.start + c.length, jnp.int32)}
@@ -291,10 +308,37 @@ class ServingEngine:
 
     # -- the loop ---------------------------------------------------------
     def run(self, requests: Seq[ServeRequest], *,
-            log=None) -> ServeReport:
-        """Serve a trace to completion; returns the ServeReport."""
+            log=None, trace=None) -> ServeReport:
+        """Serve a trace to completion; returns the ServeReport.
+
+        `trace`: a path, True, or a Tracer — records a Chrome
+        trace-event timeline of the loop (prefill batches/chunks,
+        decode steps, queue-depth and KV-occupancy counter tracks);
+        saved to the path when one is given."""
+        tracer: Optional[Tracer] = None
+        trace_path: Optional[str] = None
+        if trace is not None and trace is not False:
+            if isinstance(trace, str):
+                trace_path, tracer = trace, Tracer()
+            elif trace is True:
+                tracer = Tracer()
+            else:
+                tracer = trace
+        if tracer is not None:
+            try:
+                with tracing(tracer):
+                    report = self._run(requests, log=log)
+            finally:
+                if trace_path is not None:
+                    tracer.save(trace_path)
+            return report
+        return self._run(requests, log=log)
+
+    def _run(self, requests: Seq[ServeRequest], *,
+             log=None) -> ServeReport:
         import jax.numpy as jnp
         from .serve_step import make_slot_cache
+        tr = get_tracer()
 
         requests = sorted(requests, key=lambda r: (r.arrival_s,
                                                    r.request_id))
@@ -349,6 +393,10 @@ class ServingEngine:
             it = sched.step(t)
             queue_depth.append(it.queue_depth)
             kv_occ.append(it.kv_occupancy)
+            if tr.enabled:
+                tr.counter("queue_depth", {"waiting": it.queue_depth})
+                tr.counter("kv_occupancy",
+                           {"fraction": it.kv_occupancy})
 
             for rid in it.admitted:
                 st = sched.states[rid]
@@ -357,8 +405,11 @@ class ServingEngine:
                 token_times[rid] = []
 
             for group in it.prefill_groups:
-                n_chunks += self._run_prefill_group(
-                    group, sched, staging, pending_first, T)
+                with tr.span("prefill_group", "serve",
+                             args={"iter": n_iters,
+                                   "chunks": len(group.chunks)}):
+                    n_chunks += self._run_prefill_group(
+                        group, sched, staging, pending_first, T)
 
             # prefill-complete requests move into their decode slot.
             # The staged cache carries the right pos per path: L-1 for
@@ -398,9 +449,12 @@ class ServingEngine:
                 toks = np.zeros((self.n_slots, 1), np.int32)
                 for rid in decode_ids:
                     toks[slot_of[rid], 0] = next_token[rid]
-                out, slots = decode(self.params, slots,
-                                    jnp.asarray(toks))
-                out = np.asarray(out)
+                with tr.span("decode", "serve",
+                             args={"iter": n_iters,
+                                   "live": len(decode_ids)}):
+                    out, slots = decode(self.params, slots,
+                                        jnp.asarray(toks))
+                    out = np.asarray(out)
                 n_decode += 1
                 t_tok = now()
                 for rid in decode_ids:
@@ -450,6 +504,22 @@ class ServingEngine:
         total = sum(m.n_generated for m in reqs)
         ttfts = [m.ttft_s for m in reqs if m.ttft_s is not None]
         cache = self.planner.plan_cache
+        reg = self.metrics
+        reg.counter("serve/requests").inc(len(reqs))
+        reg.counter("serve/tokens").inc(total)
+        reg.counter("serve/iterations").inc(n_iters)
+        reg.counter("serve/decode_steps").inc(n_decode)
+        reg.counter("serve/prefill_chunks").inc(n_chunks)
+        reg.counter("serve/exe_misses").inc(exe_misses)
+        for t in ttfts:
+            reg.histogram("serve/ttft_s").observe(t)
+        for q in queue_depth:
+            reg.histogram("serve/queue_depth").observe(q)
+        for occ in kv_occ:
+            reg.histogram("serve/kv_occupancy").observe(occ)
+        reg.gauge("serve/peak_kv_blocks").set(kv.stats.peak_blocks)
+        if cache is not None:
+            reg.update_from(dict(cache.stats), "plan/cache_")
         return ServeReport(
             requests=sorted(reqs, key=lambda m: m.request_id),
             wall_s=wall,

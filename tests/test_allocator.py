@@ -206,8 +206,16 @@ def test_plan_cache_nearest_prefers_largest_overlap():
     hit = cache.nearest(near)
     assert hit is not None
     assert hit.structural_hash() == plan_b.structural_hash()
-    # nearest() is a warm-start REFERENCE: no hit/miss accounting
-    assert cache.stats == stats
+    # nearest() is a warm-start REFERENCE: the serve-path hit/miss
+    # counters stay untouched, but the lookup lands in the dedicated
+    # nearest_* accounting (PR 9 observability)
+    assert cache.stats["hits"] == stats["hits"]
+    assert cache.stats["misses"] == stats["misses"]
+    assert cache.stats["nearest_fallback"] == \
+        stats["nearest_fallback"] + 1
     # exact key present -> that entry wins outright
     exact = cache.nearest(b)
     assert exact.structural_hash() == plan_b.structural_hash()
+    assert cache.stats["nearest_exact"] == stats["nearest_exact"] + 1
+    # the empty-cache probe at the top of the test was counted too
+    assert cache.stats["nearest_none"] == 1

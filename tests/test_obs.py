@@ -1,0 +1,417 @@
+"""Observability subsystem (ISSUE 9): tracer schema + concurrency +
+ring buffer, metrics registry semantics, run-report analytics against
+hand-computed values, StepMetrics serialization, and the traced
+Engine.train integration path."""
+import json
+import threading
+
+import pytest
+
+from repro.obs import (Counter, Gauge, GroupRecord, Histogram,
+                       MetricsRegistry, NULL_TRACER, RunRecorder, Tracer,
+                       build_report, get_tracer, scale_fit,
+                       scale_fit_mape, straggler_scores, tracing,
+                       validate_trace, wave_stats)
+from repro.obs.trace import PID_HOST, PID_RANKS
+
+
+# ---------------------------------------------------------------- tracer
+def test_tracer_chrome_schema_and_tracks():
+    tr = Tracer()
+    with tr.span("solve", "planner", args={"seqs": 4}):
+        pass
+    tr.complete("stage", tr._t0, 0.001, "sched")  # explicit timestamps
+    tr.instant("marker", args={"step": 1})
+    tr.counter("kv", {"occupancy": 0.5, "blocks": 12})
+    tr.rank_span("execute", 3, tr._t0, 0.25, args={"tokens": 128})
+
+    obj = tr.to_json()
+    n = validate_trace(obj)                  # raises on any violation
+    events = obj["traceEvents"]
+    assert n == len(events)
+    # the document survives real serialization
+    assert validate_trace(json.loads(json.dumps(obj))) == n
+
+    by_ph = {}
+    for ev in events:
+        by_ph.setdefault(ev["ph"], []).append(ev)
+    assert {"X", "i", "C", "M"} <= set(by_ph)
+    # metadata names both processes and every registered track
+    meta = {(e["pid"], e["tid"], e["name"]) for e in by_ph["M"]}
+    assert (PID_HOST, 0, "process_name") in meta
+    assert (PID_RANKS, 0, "process_name") in meta
+    assert (PID_RANKS, 3, "thread_name") in meta
+    # the rank span landed on the "ranks" process, tid == rank index
+    rank_evs = [e for e in by_ph["X"] if e["pid"] == PID_RANKS]
+    assert [e["tid"] for e in rank_evs] == [3]
+    assert rank_evs[0]["dur"] == pytest.approx(0.25e6)   # us
+    # host spans carry their args through
+    solve = next(e for e in by_ph["X"] if e["name"] == "solve")
+    assert solve["args"] == {"seqs": 4} and solve["pid"] == PID_HOST
+
+
+def test_tracer_concurrent_emission_two_threads():
+    tr = Tracer()
+    n_per = 200
+
+    def worker():
+        for i in range(n_per):
+            with tr.span("planner_solve", "planner", args={"i": i}):
+                pass
+
+    t = threading.Thread(target=worker, name="planner")
+    t.start()
+    for i in range(n_per):
+        with tr.span("main_step", "train", args={"i": i}):
+            pass
+    t.join()
+
+    obj = tr.to_json()
+    validate_trace(obj)
+    spans = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == 2 * n_per           # nothing lost or torn
+    # one distinct host track per python thread
+    tids = {e["name"]: {s["tid"] for s in spans if s["name"] == e["name"]}
+            for e in spans}
+    assert len(tids["main_step"]) == 1 and len(tids["planner_solve"]) == 1
+    assert tids["main_step"] != tids["planner_solve"]
+    # the planner thread's track is labelled with its thread name
+    names = {(e["pid"], e["tid"]): e["args"]["name"]
+             for e in obj["traceEvents"] if e["name"] == "thread_name"}
+    assert "planner" in names.values()
+
+
+def test_ring_buffer_evicts_oldest_keeps_newest():
+    tr = Tracer(capacity=8)
+    with tr.span("first", "c"):
+        pass                                  # will be evicted
+    for i in range(20):
+        tr.complete(f"ev{i}", tr._t0, 0.0, "c")
+    assert len(tr) == 8
+    assert tr.dropped == 13                   # 21 emitted - 8 kept
+    obj = tr.to_json()
+    validate_trace(obj)
+    kept = [e["name"] for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert kept == [f"ev{i}" for i in range(12, 20)]   # newest window
+    # track metadata lives OUTSIDE the ring: labels survive eviction
+    assert any(e["name"] == "thread_name" for e in obj["traceEvents"])
+    assert obj["otherData"]["dropped_events"] == 13
+
+
+def test_null_tracer_and_tracing_scope():
+    assert get_tracer() is NULL_TRACER        # disabled by default
+    assert NULL_TRACER.enabled is False
+    with NULL_TRACER.span("x", "c", args={"a": 1}):
+        pass                                  # true no-op, no error
+    NULL_TRACER.complete("x", 0.0, 1.0)
+    NULL_TRACER.rank_span("x", 0, 0.0, 1.0)
+    NULL_TRACER.counter("x", {"v": 1})
+    tr = Tracer()
+    with tracing(tr):
+        assert get_tracer() is tr
+        with tracing(None):                   # None -> NULL_TRACER
+            assert get_tracer() is NULL_TRACER
+        assert get_tracer() is tr
+    assert get_tracer() is NULL_TRACER        # restored on exit
+
+
+def test_validate_trace_rejects_malformed():
+    ok = {"traceEvents": [{"name": "a", "ph": "X", "ts": 0, "dur": 1,
+                           "pid": 1, "tid": 0}]}
+    assert validate_trace(ok) == 1
+    with pytest.raises(ValueError):
+        validate_trace([])                    # not a dict
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "X", "ts": 0, "dur": 1,
+                                         "pid": 1, "tid": 0}]})  # no name
+    with pytest.raises(ValueError):           # complete event needs dur
+        validate_trace({"traceEvents": [{"name": "a", "ph": "X",
+                                         "ts": 0, "pid": 1, "tid": 0}]})
+    with pytest.raises(ValueError):           # negative timestamp
+        validate_trace({"traceEvents": [{"name": "a", "ph": "X",
+                                         "ts": -1, "dur": 1, "pid": 1,
+                                         "tid": 0}]})
+    with pytest.raises(ValueError):           # unknown phase
+        validate_trace({"traceEvents": [{"name": "a", "ph": "Z",
+                                         "ts": 0, "pid": 1, "tid": 0}]})
+    with pytest.raises(ValueError):           # string pid
+        validate_trace({"traceEvents": [{"name": "a", "ph": "X",
+                                         "ts": 0, "dur": 1, "pid": "1",
+                                         "tid": 0}]})
+
+
+# --------------------------------------------------------------- metrics
+def test_metrics_registry_semantics():
+    reg = MetricsRegistry()
+    reg.counter("steps").inc()
+    reg.counter("steps").inc(4)
+    with pytest.raises(ValueError):
+        reg.counter("steps").inc(-1)          # counters only go up
+    reg.gauge("occupancy").set(0.75)
+    for v in (1.0, 2.0, 3.0, 10.0):
+        reg.histogram("lat").observe(v)
+    with pytest.raises(TypeError):
+        reg.gauge("steps")                    # kind mismatch
+
+    snap = reg.snapshot()
+    assert snap["steps"] == 5                 # counters snapshot scalar
+    assert snap["occupancy"] == 0.75
+    assert snap["lat"]["count"] == 4
+    assert snap["lat"]["sum"] == 16.0
+    assert snap["lat"]["min"] == 1.0 and snap["lat"]["max"] == 10.0
+    json.dumps(snap)                          # snapshot is JSON-safe
+
+    prev = reg.snapshot()
+    reg.counter("steps").inc(2)
+    reg.histogram("lat").observe(5.0)
+    reg.gauge("occupancy").set(0.5)
+    d = reg.delta(prev)
+    assert d["steps"] == 2                    # counters report the diff
+    assert d["lat"]["count"] == 1 and d["lat"]["sum"] == 5.0
+    assert d["occupancy"] == 0.5              # gauges report current
+
+    reg.update_from({"hits": 3, "misses": 1, "label": "x"}, "cache/")
+    snap = reg.snapshot()
+    assert snap["cache/hits"] == 3            # numeric fields -> gauges
+    assert "cache/label" not in snap          # non-numeric skipped
+
+
+def test_histogram_percentile():
+    h = Histogram("h")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.percentile(0.5) == pytest.approx(50.0, abs=1.0)
+    assert h.percentile(0.99) == pytest.approx(99.0, abs=1.5)
+    assert Counter("c").value == 0 and Gauge("g").value == 0.0
+
+
+# ---------------------------------------------------------------- report
+def _two_wave_recorder():
+    """Synthetic run: 8 ranks, 2 waves of 2 groups (degree 4 each);
+    the wave-1 group on ranks 4-7 runs 3x slow — every downstream
+    number is hand-computable."""
+    rec = RunRecorder(n_ranks=8)
+    mk = lambda wave, group, start, meas: rec.add(GroupRecord(
+        step=0, wave=wave, group=group, start_rank=start, degree=4,
+        tokens=512, predicted_s=1.0, measured_s=meas))
+    mk(0, 0, 0, 0.010)
+    mk(0, 1, 4, 0.010)
+    mk(1, 0, 0, 0.010)
+    mk(1, 1, 4, 0.030)                        # the injected straggler
+    return rec
+
+
+def test_report_hand_computed_values():
+    rec = _two_wave_recorder()
+    report = build_report(rec)
+
+    # least-squares wall/predicted scale: sum(p*m)/sum(p^2) = 0.06/4
+    assert report.model_error["scale"] == pytest.approx(0.015)
+    # every scaled prediction misses by exactly 50%
+    assert report.model_error["mape_pct"] == pytest.approx(50.0)
+    assert report.model_error["n_samples"] == 4
+    for w in report.model_error["per_wave"]:
+        assert w["mape_pct"] == pytest.approx(50.0)
+
+    # imbalance = max/mean group time per wave: 1.0 then 0.03/0.02
+    waves = wave_stats(rec.records)
+    assert [w["imbalance"] for w in waves] == \
+        pytest.approx([1.0, 1.5])
+    assert waves[1]["makespan_s"] == pytest.approx(0.030)
+    assert report.imbalance["mean"] == pytest.approx(1.25)
+    assert report.imbalance["max"] == pytest.approx(1.5)
+    assert report.imbalance["n_waves"] == 2
+
+    # straggler scores: ranks 0-3 mean(1.0, 0.5), ranks 4-7 mean(1.0, 1.5)
+    scores = straggler_scores(rec.records, 8)
+    for r in range(4):
+        assert scores[r]["score"] == pytest.approx(0.75)
+    for r in range(4, 8):
+        assert scores[r]["score"] == pytest.approx(1.25)
+    assert report.stragglers["worst_rank"] in (4, 5, 6, 7)
+    assert report.stragglers["flagged"] == [4, 5, 6, 7]   # > 1.2
+
+    # document round-trips through real JSON with string score keys
+    doc = json.loads(json.dumps(report.to_json()))
+    assert doc["version"] == 1
+    assert doc["stragglers"]["scores"]["4"]["score"] == \
+        pytest.approx(1.25)
+    assert "run report" in report.summary()
+
+
+def test_report_excludes_compile_tainted_waves():
+    rec = _two_wave_recorder()
+    # taint wave 1 (the slow one) with a compile
+    rec.records[3].compiled = True
+    report = build_report(rec)
+    # imbalance/straggler stats now use only the clean wave 0
+    assert report.imbalance["n_waves"] == 1
+    assert report.imbalance["max"] == pytest.approx(1.0)
+    assert report.imbalance["clean"] is True
+    scores = report.stragglers["scores"]
+    assert all(scores[r]["waves"] == 1 for r in range(8))
+    # MAPE sample drops the compiled group (scale refits on the rest)
+    assert report.model_error["n_samples"] == 3
+    assert report.model_error["scale"] == pytest.approx(0.010)
+    assert report.model_error["mape_pct"] == pytest.approx(0.0)
+
+    # all-tainted run: fall back to using everything rather than
+    # reporting an empty document (short smoke runs)
+    for r in rec.records:
+        r.compiled = True
+    fallback = build_report(rec)
+    assert fallback.imbalance["n_waves"] == 2
+    assert fallback.imbalance["clean"] is False
+    assert fallback.model_error["n_samples"] == 4
+
+
+def test_scale_fit_edge_cases():
+    assert scale_fit([], []) == 0.0
+    assert scale_fit([1.0, 2.0], [2.0, 4.0]) == pytest.approx(2.0)
+    mape, scale, n = scale_fit_mape([1.0, 1.0], [0.0, 2.0])
+    assert n == 1                             # zero measurement skipped
+    assert scale == pytest.approx(2.0)
+    assert mape == pytest.approx(0.0)
+    assert scale_fit_mape([], []) == (0.0, 0.0, 0)
+
+
+def test_group_record_round_trip():
+    r = GroupRecord(step=2, wave=1, group=0, start_rank=4, degree=4,
+                    tokens=256, predicted_s=1.5, measured_s=0.02,
+                    compiled=True)
+    assert list(r.ranks) == [4, 5, 6, 7]
+    back = GroupRecord.from_json(json.loads(json.dumps(r.to_json())))
+    assert back == r
+
+
+# ----------------------------------------------- StepMetrics round-trip
+def test_step_metrics_round_trip():
+    from repro.api.engine import (StepMetrics, metrics_from_json,
+                                  metrics_to_json)
+    m = StepMetrics(step=3, loss=1.25, tokens=4096, step_time_s=0.5,
+                    strategy="dhp", schedule_ms=0.7, solver_ms=0.2,
+                    stage_ms={"pack": 0.1},
+                    degree_histogram={1: 4, 2: 2},
+                    model_error_pct=12.5,
+                    plan_cache={"hits": 2, "misses": 1})
+    doc = json.loads(json.dumps(metrics_to_json([m])))
+    assert doc["version"] == 1
+    back = metrics_from_json(doc)
+    assert len(back) == 1
+    b = back[0]
+    assert b.step == 3 and b.loss == 1.25
+    assert b.degree_histogram == {1: 4, 2: 2}   # int keys restored
+    assert b.model_error_pct == 12.5
+    assert b.plan_cache == {"hits": 2, "misses": 1}
+    # unknown fields from future versions are ignored, not fatal
+    obj = m.to_json()
+    obj["some_future_field"] = 1
+    assert StepMetrics.from_json(obj).step == 3
+
+
+# ------------------------------------------------- engine integration
+def test_traced_train_produces_valid_trace_and_report(subproc, tmp_path):
+    out = subproc("""
+import json
+from repro.api import ClusterSpec, Engine, get_strategy
+from repro.configs import get_config
+from repro.data.pipeline import HeterogeneousLoader
+from repro.obs.trace import PID_HOST, PID_RANKS, validate_trace
+
+cfg = get_config("internvl3-2b").reduced().with_(
+    family="dense", vlm=None, d_model=64, n_heads=4, kv_heads=2,
+    d_ff=256, vocab=512, n_layers=2)
+eng = Engine(cfg, ClusterSpec.auto(mem_budget=500.0), seed=0,
+             strategy=get_strategy("dhp"))
+loader = HeterogeneousLoader("openvid", 16, cfg.vocab, seed=3,
+                             max_tokens=450, tokens_per_frame=16)
+hist = eng.train(loader=iter(loader), steps=3, lookahead=True,
+                 trace=True, report=True)
+rep = eng.last_report
+
+tr_obj = None
+# trace=True keeps the tracer internal; re-run with an explicit path
+from repro.obs import Tracer
+tracer = Tracer()
+loader = HeterogeneousLoader("openvid", 16, cfg.vocab, seed=4,
+                             max_tokens=450, tokens_per_frame=16)
+hist2 = eng.train(loader=iter(loader), steps=3, lookahead=True,
+                  trace=tracer, report=True)
+obj = tracer.to_json()
+n = validate_trace(obj)
+names = sorted({e["name"] for e in obj["traceEvents"]})
+host_tids = {e["tid"] for e in obj["traceEvents"]
+             if e["pid"] == PID_HOST and e["ph"] == "X"}
+rank_tids = {e["tid"] for e in obj["traceEvents"]
+             if e["pid"] == PID_RANKS and e["ph"] == "X"}
+rep2 = eng.last_report
+print(json.dumps({
+    "n_events": n,
+    "names": names,
+    "n_host_tracks": len(host_tids),
+    "rank_tids": sorted(rank_tids),
+    "mape": rep2.model_error["mape_pct"],
+    "n_samples": rep2.model_error["n_samples"],
+    "n_waves": rep2.imbalance["n_waves"],
+    "worst_rank": rep2.stragglers["worst_rank"],
+    "steps_serialized": len(rep2.steps),
+    "first_report_steps": len(rep.steps),
+    "model_error_pct": [m.model_error_pct for m in hist2],
+    "metrics_keys": sorted(eng.metrics.snapshot())[:4],
+}))
+eng.close()
+""", n_devices=8)
+    info = json.loads(out.strip().splitlines()[-1])
+    # every instrumented layer shows up in the timeline
+    for name in ("microbatch", "pack", "allocate_cost", "allocate_dp",
+                 "plan", "run_plan", "collect", "execute"):
+        assert name in info["names"], (name, info["names"])
+    # main loop + lookahead planner thread = 2 host tracks
+    assert info["n_host_tracks"] >= 2
+    # per-rank execute spans cover the whole 8-rank cluster
+    assert info["rank_tids"] == list(range(8))
+    # the run report carries the acceptance analytics
+    assert info["n_samples"] > 0
+    assert info["n_waves"] >= 1
+    assert info["worst_rank"] is not None
+    assert info["steps_serialized"] == 3      # StepMetrics embedded
+    assert info["first_report_steps"] == 3
+    # measuring mode produced a per-step cost-model error signal
+    assert any(e > 0 for e in info["model_error_pct"])
+    assert info["n_events"] > 0
+
+
+def test_serving_trace_valid(subproc):
+    out = subproc("""
+import json
+import numpy as np
+from repro.api import ClusterSpec, Engine
+from repro.obs import Tracer
+from repro.obs.trace import validate_trace
+from repro.serving.trace import sample_trace
+
+eng = Engine("internvl3-2b", ClusterSpec.auto(), reduced=True, seed=0)
+rng = np.random.default_rng(0)
+reqs = sample_trace("openvid", 3, rng, vocab=eng.cfg.vocab,
+                    max_prompt=64, mean_new_tokens=4, max_new_tokens=6)
+srv = eng.serving(slots=2, prefill_chunk=32)
+tracer = Tracer()
+report = srv.run(reqs, trace=tracer)
+obj = tracer.to_json()
+n = validate_trace(obj)
+names = sorted({e["name"] for e in obj["traceEvents"]})
+snap = srv.metrics.snapshot()
+print(json.dumps({"n": n, "names": names,
+                  "decode_steps": snap["serve/decode_steps"],
+                  "report_decode": report.n_decode_steps,
+                  "kv_hist": snap["serve/kv_occupancy"]["count"]}))
+eng.close()
+""", n_devices=8)
+    info = json.loads(out.strip().splitlines()[-1])
+    assert "decode" in info["names"]
+    assert "kv_occupancy" in info["names"]
+    assert "queue_depth" in info["names"]
+    assert any(n.startswith("prefill") for n in info["names"])
+    # metrics registry agrees with the ServeReport
+    assert info["decode_steps"] == info["report_decode"] > 0
+    assert info["kv_hist"] > 0
